@@ -1,0 +1,169 @@
+"""Shared benchmark machinery.
+
+The paper's 19 datasets are not reachable offline; each is replaced by a
+deterministic GMM surrogate with the same feature dimension and a scaled-down
+row count (documented in EXPERIMENTS.md §Quality).  Algorithms, metrics and
+the scoring system follow §5.7 of the paper:
+
+    E_A = (f_A - f_best) / f_best * 100%
+    S(A, X, q) = 1 - (q_X(A) - min_A' q)/(max_A' q - min_A' q)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core import big_means, full_objective
+from repro.core.baselines import (
+    da_mssc, forgy_kmeans, kmeans_parallel, lightweight_coreset_kmeans,
+    multistart_kmeans,
+)
+from repro.data.synthetic import GMMSpec, gmm_dataset
+
+# surrogate suite: (paper dataset name, n features, surrogate m, chunk size s)
+SUITE = [
+    ("hepmass", 28, 40000, 3000),
+    ("uscensus", 68, 25000, 2500),
+    ("miniboone", 50, 20000, 2500),
+    ("mfcc", 58, 16000, 2000),
+    ("sensorless", 48, 16000, 2000),
+    ("road3d", 3, 40000, 3000),
+    ("kegg", 20, 16000, 2000),
+    ("skin", 3, 30000, 2500),
+]
+
+K_VALUES = (2, 5, 10, 15)
+N_EXEC = 2
+
+
+@dataclasses.dataclass
+class RunResult:
+    algo: str
+    dataset: str
+    k: int
+    f: float          # objective on the full dataset
+    cpu: float        # wall seconds
+    n_d: float        # distance evaluations (analytic counter)
+
+
+def dataset(name: str, n: int, m: int, seed: int = 0):
+    return gmm_dataset(GMMSpec(m=m, n=n, components=25, spread=4.0,
+                               seed=hash(name) % (2**31)))
+
+
+def _nd_lloyd(m, k, iters):
+    return float(m) * k * (iters + 1)
+
+
+def run_algo(algo: str, X, key, k: int, s: int) -> RunResult:
+    m = X.shape[0]
+    t0 = time.monotonic()
+    if algo == "bigmeans":
+        st, infos = big_means(X, key, k=k, s=s, n_chunks=30)
+        st.centroids.block_until_ready()
+        cpu = time.monotonic() - t0
+        f = float(full_objective(X, st.centroids))
+        n_d = float(st.n_dist_evals)
+    elif algo == "forgy":
+        res = forgy_kmeans(X, key, k=k)
+        res.centroids.block_until_ready()
+        cpu = time.monotonic() - t0
+        f = float(res.objective)
+        n_d = _nd_lloyd(m, k, int(res.iterations))
+    elif algo == "kmeans++":
+        res = multistart_kmeans(X, key, k=k, n_init=3)
+        res.centroids.block_until_ready()
+        cpu = time.monotonic() - t0
+        f = float(res.objective)
+        n_d = 3 * (_nd_lloyd(m, k, int(res.iterations)) + m * k)
+    elif algo == "kmeans||":
+        res = kmeans_parallel(X, key, k=k, rounds=5)
+        res.centroids.block_until_ready()
+        cpu = time.monotonic() - t0
+        f = float(res.objective)
+        n_d = _nd_lloyd(m, k, int(res.iterations)) + 5 * m * 2 * k
+    elif algo == "lwcs":
+        res = lightweight_coreset_kmeans(X, key, k=k, s=4 * s)
+        cpu = time.monotonic() - t0
+        f = float(full_objective(X, res.centroids))
+        n_d = 2 * m + _nd_lloyd(4 * s, k, int(res.iterations))
+    elif algo == "da_mssc":
+        res = da_mssc(X, key, k=k, s=s, q=6)
+        cpu = time.monotonic() - t0
+        f = float(full_objective(X, res.centroids))
+        n_d = 6 * _nd_lloyd(s, k, 20) + _nd_lloyd(6 * k, k, 20)
+    else:
+        raise ValueError(algo)
+    return RunResult(algo, "?", k, f, cpu, n_d)
+
+
+ALGOS = ("bigmeans", "forgy", "kmeans++", "kmeans||", "lwcs", "da_mssc")
+
+
+def full_sweep(algos=ALGOS, suite=SUITE, k_values=K_VALUES, n_exec=N_EXEC,
+               verbose=True):
+    rows: list[RunResult] = []
+    for name, n, m, s in suite:
+        X = dataset(name, n, m)
+        for k in k_values:
+            for algo in algos:
+                for e in range(n_exec):
+                    key = jax.random.PRNGKey(hash((name, k, algo, e)) % 2**31)
+                    r = run_algo(algo, X, key, k, s)
+                    r.dataset = name
+                    rows.append(r)
+                if verbose:
+                    rs = [r for r in rows
+                          if r.dataset == name and r.k == k and r.algo == algo]
+                    fm = np.mean([r.f for r in rs])
+                    cm = np.mean([r.cpu for r in rs])
+                    print(f"[bench] {name:12s} k={k:<3d} {algo:10s} "
+                          f"f={fm:.4e} cpu={cm:6.2f}s", flush=True)
+    return rows
+
+
+def relative_errors(rows):
+    """E_A per (dataset, k, algo) vs the best f seen across all algos."""
+    out = {}
+    keys = {(r.dataset, r.k) for r in rows}
+    for ds, k in keys:
+        fs = [r.f for r in rows if (r.dataset, r.k) == (ds, k)]
+        f_best = min(fs)
+        for algo in {r.algo for r in rows}:
+            sub = [r.f for r in rows
+                   if (r.dataset, r.k, r.algo) == (ds, k, algo)]
+            if not sub:
+                continue
+            e = [(f - f_best) / f_best * 100.0 for f in sub]
+            out[(ds, k, algo)] = {
+                "min": min(e), "mean": float(np.mean(e)), "max": max(e),
+                "cpu": float(np.mean([r.cpu for r in rows if
+                                      (r.dataset, r.k, r.algo) == (ds, k, algo)])),
+                "n_d": float(np.mean([r.n_d for r in rows if
+                                      (r.dataset, r.k, r.algo) == (ds, k, algo)])),
+            }
+    return out
+
+
+def scores(rows):
+    """Paper Table 3/4 scoring: per-dataset normalized accuracy/time."""
+    err = relative_errors(rows)
+    datasets = sorted({r.dataset for r in rows})
+    algos = sorted({r.algo for r in rows})
+    acc = {a: 0.0 for a in algos}
+    cpu = {a: 0.0 for a in algos}
+    for ds in datasets:
+        # mean E_A / cpu across k per algo on this dataset
+        ea = {a: np.mean([err[(ds, k, a)]["mean"] for k in K_VALUES
+                          if (ds, k, a) in err]) for a in algos}
+        ct = {a: np.mean([err[(ds, k, a)]["cpu"] for k in K_VALUES
+                          if (ds, k, a) in err]) for a in algos}
+        for table, vals in ((acc, ea), (cpu, ct)):
+            lo, hi = min(vals.values()), max(vals.values())
+            for a in algos:
+                s = 1.0 if hi == lo else 1.0 - (vals[a] - lo) / (hi - lo)
+                table[a] += s
+    return {"accuracy": acc, "cpu": cpu, "n_datasets": len(datasets)}

@@ -1,0 +1,33 @@
+"""Quickstart: cluster a synthetic big-data stream with Big-means.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import big_means, full_assignment, full_objective, kmeanspp, lloyd
+from repro.data.synthetic import GMMSpec, gmm_dataset
+
+
+def main():
+    # 200k points, 16 features, 12 latent components
+    X = gmm_dataset(GMMSpec(m=200_000, n=16, components=12, seed=0))
+    k, s = 12, 4000
+
+    print(f"dataset: {X.shape},  k={k},  chunk size s={s}")
+    state, infos = big_means(X, jax.random.PRNGKey(0), k=k, s=s, n_chunks=40)
+    print(f"chunks processed: 40, accepted improvements: {int(state.n_accepted)}")
+    print(f"distance evaluations: {float(state.n_dist_evals):.3e} "
+          f"(full K-means needs ~{2.0 * X.shape[0] * k * 20:.3e} per run)")
+
+    ids, f = full_assignment(X, state.centroids)
+    print(f"Big-means   f(C, X) = {float(f):.6e}")
+
+    # reference: K-means++ + Lloyd on the FULL dataset
+    c0 = kmeanspp(X, jax.random.PRNGKey(1), k)
+    res = lloyd(X, c0)
+    print(f"full K-means f(C, X) = {float(res.objective):.6e} "
+          f"({int(res.iterations)} Lloyd iterations over all {X.shape[0]} points)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Minimal, dependency-free checkpointing (orbax is not available offline).
+
+* atomic: write to ``<dir>/tmp.<step>`` then ``os.replace`` to ``step_<n>``;
+* bounded: keeps the last ``keep`` checkpoints;
+* elastic: arrays are stored as full logical values; ``restore`` re-shards
+  with whatever sharding the caller passes — restarting on a different
+  worker count / mesh shape needs no conversion step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(directory: str, step: int, tree, *, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f"tmp.{step}")
+    final = os.path.join(directory, f"step_{step:012d}")
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves, treedef = _flatten(tree)
+    arrays = {f"a{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "n_leaves": len(leaves),
+                   "treedef": str(treedef)}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+
+    ckpts = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
+    for stale in ckpts[:-keep]:
+        shutil.rmtree(os.path.join(directory, stale))
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    ckpts = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
+    if not ckpts:
+        return None
+    return int(ckpts[-1].split("_")[1])
+
+
+def restore(directory: str, example_tree, *, step: int | None = None,
+            shardings=None):
+    """Load into the structure of ``example_tree``; optionally device_put with
+    ``shardings`` (same pytree structure or a single sharding)."""
+    if step is None:
+        step = latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:012d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = _flatten(example_tree)
+    assert len(leaves) == len(data.files), (len(leaves), len(data.files))
+    new_leaves = [data[f"a{i}"] for i in range(len(leaves))]
+    tree = jax.tree.unflatten(treedef, new_leaves)
+    if shardings is not None:
+        if not isinstance(shardings, (list, dict, tuple)) and not hasattr(
+            shardings, "keys"
+        ):
+            tree = jax.tree.map(lambda a: jax.device_put(a, shardings), tree)
+        else:
+            tree = jax.tree.map(jax.device_put, tree, shardings)
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree, step

@@ -1,0 +1,141 @@
+"""Host-streaming Big-means driver: out-of-core data, checkpoints, failures.
+
+This is the production entry point for datasets that do not fit device (or
+host) memory.  Chunks are *fetched* by a user-supplied provider — a memmap
+slice, a shard of a distributed file system, or the synthetic generator — and
+fed to the jitted ``chunk_step``.  Design properties (DESIGN.md §6):
+
+* **fault tolerance** — global state is (C, degenerate, f_best, step, key):
+  kilobytes.  Checkpoint every ``ckpt_every`` chunks; on restart, resume from
+  the latest checkpoint.  A lost/failed chunk is simply skipped: chunks are
+  i.i.d. uniform samples, so dropping one changes nothing statistically (the
+  algorithm is natively fault-tolerant).
+* **straggler mitigation** — the Lloyd iteration budget is a compile-time
+  bound, and a wall-clock budget (the paper's cpu_max stop condition) caps
+  the whole run; a straggling provider fetch can be skipped after
+  ``fetch_timeout`` without violating correctness (same argument as above).
+* **elasticity** — the state carries no topology; rescaling workers between
+  restarts only changes how many chunk streams advance per wall-clock second.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterator
+
+import jax
+import numpy as np
+
+from repro.cluster import checkpoint
+from repro.core import bigmeans
+
+ChunkProvider = Callable[[int], np.ndarray]
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    k: int
+    s: int
+    n_chunks: int = 1_000_000         # effectively "until budget"
+    max_iters: int = 300
+    tol: float = 1e-4
+    candidates: int = 3
+    impl: str = "auto"
+    time_budget_s: float | None = None   # paper's cpu_max
+    ckpt_dir: str | None = None
+    ckpt_every: int = 100
+    log_every: int = 50
+    seed: int = 0
+    # --- VNS extension (paper §6 future work): when the incumbent stalls
+    # for `vns_patience` chunks, move to the next chunk size in the ladder
+    # (stronger shaking on smaller chunks, finer approximation on larger);
+    # an acceptance resets to the base size.  Empty ladder = paper baseline.
+    vns_ladder: tuple = ()
+    vns_patience: int = 10
+
+
+@dataclasses.dataclass
+class RunnerMetrics:
+    chunks_done: int = 0
+    chunks_failed: int = 0
+    accepted: int = 0
+    wall_time_s: float = 0.0
+    f_best: float = float("inf")
+    trace: list = dataclasses.field(default_factory=list)
+
+
+def run(
+    provider: ChunkProvider,
+    cfg: RunnerConfig,
+    *,
+    n_features: int,
+    resume: bool = True,
+    fault_injector: Callable[[int], None] | None = None,
+) -> tuple[bigmeans.BigMeansState, RunnerMetrics]:
+    """Stream chunks through Big-means until the chunk count or time budget."""
+    state = bigmeans.init_state(cfg.k, n_features)
+    start_chunk = 0
+    key = jax.random.PRNGKey(cfg.seed)
+
+    if resume and cfg.ckpt_dir and checkpoint.latest_step(cfg.ckpt_dir) is not None:
+        (state, key), start_chunk = checkpoint.restore(
+            cfg.ckpt_dir, (state, key)
+        )
+
+    metrics = RunnerMetrics(f_best=float(state.f_best))
+    t0 = time.monotonic()
+
+    ladder = (cfg.s,) + tuple(cfg.vns_ladder)
+    rung, stall = 0, 0
+    last_s = cfg.s
+
+    for chunk_id in range(start_chunk, cfg.n_chunks):
+        if cfg.time_budget_s is not None:
+            if time.monotonic() - t0 > cfg.time_budget_s:
+                break
+        # Per-chunk keys are folded from (seed, chunk_id): restarts and
+        # worker-count changes replay the identical sample stream.
+        ck = jax.random.fold_in(key, chunk_id)
+        try:
+            if fault_injector is not None:
+                fault_injector(chunk_id)
+            chunk = np.asarray(provider(chunk_id), dtype=np.float32)
+        except Exception:
+            metrics.chunks_failed += 1
+            continue        # skip: uniform chunks are interchangeable
+        s_now = ladder[rung]
+        if chunk.shape[0] > s_now:
+            chunk = chunk[:s_now]       # VNS: shrink the neighbourhood
+        if chunk.shape[0] != last_s and np.isfinite(float(state.f_best)):
+            # objectives are sums over s points: rescale the incumbent's
+            # objective so acceptance compares per-point quality
+            state = state._replace(
+                f_best=state.f_best * (chunk.shape[0] / last_s))
+        last_s = chunk.shape[0]
+        state, info = bigmeans.chunk_step(
+            jax.numpy.asarray(chunk), state, ck,
+            max_iters=cfg.max_iters, tol=cfg.tol,
+            candidates=cfg.candidates, impl=cfg.impl,
+        )
+        metrics.chunks_done += 1
+        if bool(info.accepted):
+            metrics.accepted += 1
+            rung, stall = 0, 0          # VNS: success -> base neighbourhood
+        elif cfg.vns_ladder:
+            stall += 1
+            if stall >= cfg.vns_patience:
+                rung = min(rung + 1, len(ladder) - 1)
+                stall = 0
+        if cfg.log_every and metrics.chunks_done % cfg.log_every == 0:
+            metrics.trace.append(
+                (chunk_id, float(state.f_best), float(info.f_new))
+            )
+        if cfg.ckpt_dir and (chunk_id + 1) % cfg.ckpt_every == 0:
+            checkpoint.save(cfg.ckpt_dir, chunk_id + 1, (state, key))
+
+    if cfg.ckpt_dir:
+        checkpoint.save(cfg.ckpt_dir, metrics.chunks_done + start_chunk,
+                        (state, key))
+    metrics.wall_time_s = time.monotonic() - t0
+    metrics.f_best = float(state.f_best)
+    return state, metrics

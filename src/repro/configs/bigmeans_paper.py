@@ -1,0 +1,22 @@
+"""The paper's own workload as a dry-runnable config: Big-means on a
+HEPMASS-scale stream (m=10.5M, n=27, k=25, s=64000 — the paper's largest
+setting), two-level decomposition on the production mesh."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class BigMeansWorkload:
+    name: str = "bigmeans_paper"
+    family: str = "cluster"
+    m: int = 10_500_000
+    n_features: int = 27
+    k: int = 25
+    s: int = 64_000
+    chunks_per_worker: int = 4
+    sync_every: int = 2
+    max_iters: int = 300
+    tol: float = 1e-4
+    candidates: int = 3
+
+
+CONFIG = BigMeansWorkload()

@@ -1,0 +1,13 @@
+"""gemma2-2b [arXiv:2408.00118] — local/global alternating, logit softcaps."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-2b", family="dense",
+    num_layers=26, d_model=2304, num_heads=8, num_kv_heads=4, head_dim=256,
+    d_ff=9216, vocab_size=256000,
+    mlp="geglu", layer_pattern="local_global", window=4096,
+    attn_softcap=50.0, final_softcap=30.0,
+    scale_embedding=True, sandwich_norm=True, tie_embeddings=True,
+    # local layers bound the KV working set => eligible for long_500k decode
+    sub_quadratic=True,
+)

@@ -1,0 +1,10 @@
+"""mamba2-2.7b [arXiv:2405.21060] — SSD (state-space duality), attention-free."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b", family="ssm", ssm=True,
+    num_layers=64, d_model=2560, num_heads=1, num_kv_heads=1, head_dim=1,
+    d_ff=0, vocab_size=50280,
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_conv=4, ssm_chunk=256,
+    mlp="swiglu", tie_embeddings=True, sub_quadratic=True,
+)

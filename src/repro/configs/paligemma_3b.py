@@ -1,0 +1,15 @@
+"""paligemma-3b [arXiv:2407.07726] — SigLIP stub + gemma backbone (MQA).
+
+The vision tower is a STUB per the assignment: input_specs feeds precomputed
+patch embeddings [B, 256, 1152] (SigLIP-So400m output width); the backbone
+uses a prefix-LM mask (bidirectional over the image prefix).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b", family="vlm",
+    num_layers=18, d_model=2048, num_heads=8, num_kv_heads=1, head_dim=256,
+    d_ff=16384, vocab_size=257216,
+    mlp="geglu", scale_embedding=True, tie_embeddings=True,
+    frontend="vision", frontend_dim=1152, frontend_len=256,
+)

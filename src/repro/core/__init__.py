@@ -1,0 +1,30 @@
+"""Paper core: Big-means MSSC decomposition clustering."""
+from repro.core.bigmeans import (
+    BigMeansState,
+    ChunkInfo,
+    big_means,
+    big_means_sharded,
+    chunk_step,
+    init_state,
+    sample_chunk,
+)
+from repro.core.kmeans import KMeansResult, lloyd
+from repro.core.kmeanspp import kmeanspp, seed
+from repro.core.objective import chunk_objective, full_assignment, full_objective
+
+__all__ = [
+    "BigMeansState",
+    "ChunkInfo",
+    "KMeansResult",
+    "big_means",
+    "big_means_sharded",
+    "chunk_objective",
+    "chunk_step",
+    "full_assignment",
+    "full_objective",
+    "init_state",
+    "kmeanspp",
+    "lloyd",
+    "sample_chunk",
+    "seed",
+]

@@ -1,0 +1,16 @@
+"""Competitor algorithms from the paper's §5 (implemented, not stubbed)."""
+from repro.core.baselines.forgy import forgy_kmeans
+from repro.core.baselines.multistart import multistart_kmeans
+from repro.core.baselines.kmeans_parallel import kmeans_parallel
+from repro.core.baselines.coreset import lightweight_coreset_kmeans
+from repro.core.baselines.da_mssc import da_mssc
+from repro.core.baselines.ward import ward
+
+__all__ = [
+    "forgy_kmeans",
+    "multistart_kmeans",
+    "kmeans_parallel",
+    "lightweight_coreset_kmeans",
+    "da_mssc",
+    "ward",
+]

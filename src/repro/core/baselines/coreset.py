@@ -1,0 +1,41 @@
+"""Lightweight coresets (Bachem et al., paper §5.1 eq. (10))."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kmeans
+from repro.core.kmeanspp import kmeanspp
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "s", "candidates", "max_iters", "tol", "impl")
+)
+def lightweight_coreset_kmeans(
+    X: jax.Array,
+    key: jax.Array,
+    *,
+    k: int,
+    s: int,
+    candidates: int = 3,
+    max_iters: int = 300,
+    tol: float = 1e-4,
+    impl: str = "auto",
+) -> kmeans.KMeansResult:
+    """Build an (eps,k)-lightweight coreset of size s, cluster it weighted."""
+    X = X.astype(jnp.float32)
+    m = X.shape[0]
+    mu = jnp.mean(X, axis=0)
+    dmu = jnp.sum((X - mu) ** 2, axis=1)                   # two-pass: q(x)
+    q = 0.5 / m + 0.5 * dmu / jnp.maximum(jnp.sum(dmu), 1e-30)
+
+    key, ks, kc = jax.random.split(key, 3)
+    idx = jax.random.categorical(ks, jnp.log(q), shape=(s,))
+    C = X[idx]
+    w = 1.0 / (s * q[idx])                                 # unbiased weights
+
+    c0 = kmeanspp(C, kc, k, candidates=candidates, weights=w)
+    return kmeans.lloyd(C, c0, weights=w, max_iters=max_iters, tol=tol,
+                        impl=impl)

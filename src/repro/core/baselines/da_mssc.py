@@ -1,0 +1,55 @@
+"""Decomposition/Aggregation MSSC (paper §5.4).
+
+Phase 1: partition a sample of the data into q independent chunks, cluster
+each into k clusters (K-means++ init + Lloyd), pool all q*k centroids
+weighted by their cluster sizes.  Phase 2: cluster the weighted pool into k.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kmeans
+from repro.core.kmeanspp import kmeanspp
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "s", "q", "candidates", "max_iters", "tol", "impl"),
+)
+def da_mssc(
+    X: jax.Array,
+    key: jax.Array,
+    *,
+    k: int,
+    s: int,
+    q: int,
+    candidates: int = 3,
+    max_iters: int = 300,
+    tol: float = 1e-4,
+    impl: str = "auto",
+) -> kmeans.KMeansResult:
+    X = X.astype(jnp.float32)
+    m, n = X.shape
+
+    key, kperm = jax.random.split(key)
+    idx = jax.random.randint(kperm, (q, s), 0, m)          # q chunks of size s
+    chunks = X[idx]                                        # [q, s, n]
+
+    def cluster_chunk(chunk, key):
+        c0 = kmeanspp(chunk, key, k, candidates=candidates)
+        res = kmeans.lloyd(chunk, c0, max_iters=max_iters, tol=tol, impl=impl)
+        return res.centroids, res.counts
+
+    keys = jax.random.split(key, q + 1)
+    cents, counts = jax.lax.map(
+        lambda args: cluster_chunk(*args), (chunks, keys[1:])
+    )                                                      # [q,k,n], [q,k]
+    pool = cents.reshape(q * k, n)
+    w = counts.reshape(q * k)
+
+    c0 = kmeanspp(pool, keys[0], k, candidates=candidates, weights=w)
+    return kmeans.lloyd(pool, c0, weights=w, max_iters=max_iters, tol=tol,
+                        impl=impl)

@@ -1,0 +1,23 @@
+"""Forgy K-means (paper §5.2): uniform-k-point init + full-data Lloyd."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core import kmeans
+
+
+@functools.partial(jax.jit, static_argnames=("k", "max_iters", "tol", "impl"))
+def forgy_kmeans(
+    X: jax.Array,
+    key: jax.Array,
+    *,
+    k: int,
+    max_iters: int = 300,
+    tol: float = 1e-4,
+    impl: str = "auto",
+) -> kmeans.KMeansResult:
+    idx = jax.random.choice(key, X.shape[0], (k,), replace=False)
+    c0 = X[idx]
+    return kmeans.lloyd(X, c0, max_iters=max_iters, tol=tol, impl=impl)

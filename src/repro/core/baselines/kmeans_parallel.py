@@ -1,0 +1,69 @@
+"""K-means|| (Bahmani et al., paper §5.3) — scalable K-means++.
+
+Fixed-shape JAX adaptation: the original samples each point independently
+with probability min(1, l*d(x)/phi) per round (variable count); we sample
+exactly ``l`` points per round from the same distribution (multinomial with
+replacement).  The expected oversampling per round matches; the deviation is
+documented in DESIGN.md.  Paper settings: l = 2k, r = 5 rounds for the
+largest datasets, r = log(psi) otherwise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kmeans
+from repro.core.kmeanspp import kmeanspp
+from repro.core.kmeanspp import _safe_d2_logits
+from repro.kernels import ops, ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "l", "rounds", "max_iters", "tol", "impl")
+)
+def kmeans_parallel(
+    X: jax.Array,
+    key: jax.Array,
+    *,
+    k: int,
+    l: int | None = None,
+    rounds: int = 5,
+    max_iters: int = 300,
+    tol: float = 1e-4,
+    impl: str = "auto",
+) -> kmeans.KMeansResult:
+    X = X.astype(jnp.float32)
+    m, n = X.shape
+    if l is None:
+        l = 2 * k                                    # paper's optimal setting
+
+    key, k0 = jax.random.split(key)
+    first = X[jax.random.randint(k0, (), 0, m)]
+    pool = jnp.zeros((1 + l * rounds, n), jnp.float32).at[0].set(first)
+    d = ref.min_update_ref(jnp.full((m,), jnp.inf, jnp.float32), X, first)
+
+    def round_body(r, carry):
+        key, pool, d = carry
+        key, kr = jax.random.split(key)
+        idx = jax.random.categorical(kr, _safe_d2_logits(d), shape=(l,))
+        newpts = X[idx]                              # [l, n]
+        pool = jax.lax.dynamic_update_slice(pool, newpts, (1 + r * l, 0))
+        dc = ref.pairwise_sqdist_ref(X, newpts)      # [m, l]
+        d = jnp.minimum(d, jnp.min(dc, axis=1))
+        return key, pool, d
+
+    key, pool, d = jax.lax.fori_loop(0, rounds, round_body, (key, pool, d))
+
+    # Weight pool members by the number of dataset points closest to them,
+    # then recluster the weighted pool down to k with K-means++ and Lloyd.
+    ids, _ = ops.assign(X, pool, impl=impl)
+    _, w = ops.update(X, ids, pool.shape[0], impl=impl)
+    key, k1 = jax.random.split(key)
+    c0 = kmeanspp(pool, k1, k, weights=w)
+    pooled = kmeans.lloyd(pool, c0, weights=w, max_iters=max_iters, tol=tol,
+                          impl=impl)
+    # Final Lloyd on the full dataset from the K-means|| seeds.
+    return kmeans.lloyd(X, pooled.centroids, max_iters=max_iters, tol=tol,
+                        impl=impl)

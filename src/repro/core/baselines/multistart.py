@@ -1,0 +1,55 @@
+"""Multi-start K-means: n_init restarts (Forgy or K-means++ init), keep best.
+
+This is the paper's "K-means++" competitor column when ``init='kmeans++'``
+and the classical multi-start K-means when ``init='forgy'``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kmeans
+from repro.core.kmeanspp import kmeanspp
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "n_init", "init", "candidates", "max_iters", "tol", "impl"),
+)
+def multistart_kmeans(
+    X: jax.Array,
+    key: jax.Array,
+    *,
+    k: int,
+    n_init: int = 3,
+    init: str = "kmeans++",
+    candidates: int = 3,
+    max_iters: int = 300,
+    tol: float = 1e-4,
+    impl: str = "auto",
+) -> kmeans.KMeansResult:
+    def one(key):
+        if init == "kmeans++":
+            c0 = kmeanspp(X, key, k, candidates=candidates)
+        elif init == "forgy":
+            idx = jax.random.choice(key, X.shape[0], (k,), replace=False)
+            c0 = X[idx]
+        else:
+            raise ValueError(init)
+        res = kmeans.lloyd(X, c0, max_iters=max_iters, tol=tol, impl=impl)
+        return res
+
+    def body(best, key):
+        res = one(key)
+        better = res.objective < best.objective
+        take = lambda a, b: jnp.where(
+            jnp.reshape(better, (1,) * a.ndim), a, b
+        )
+        return jax.tree.map(take, res, best), res.objective
+
+    keys = jax.random.split(key, n_init)
+    first = one(keys[0])
+    best, objs = jax.lax.scan(body, first, keys[1:])
+    return best

@@ -1,0 +1,245 @@
+"""Big-means (Algorithm 3): decomposition-driven global search for MSSC.
+
+Three drivers share one jitted ``chunk_step``:
+
+* :func:`big_means` — the paper's sequential algorithm as a ``lax.scan`` over
+  uniformly sampled chunks (in-core dataset).
+* :func:`big_means_sharded` — the multi-worker generalization: every worker
+  (one group of the ``workers`` mesh axis) runs an independent chunk stream
+  against its own incumbent and the incumbents are exchanged by a tiny
+  argmin-all-reduce every ``sync_every`` chunks.  ``sync_every=1`` is the
+  "collective" mode, ``sync_every=n_chunks`` the "competitive" mode; world
+  size 1 recovers the paper exactly.
+* ``repro.cluster.runner`` — host-streaming driver (out-of-core data,
+  checkpoints, stragglers) built on the same ``chunk_step``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import kmeans, kmeanspp
+
+
+class BigMeansState(NamedTuple):
+    centroids: jax.Array     # [k, n] f32 — incumbent C
+    degenerate: jax.Array    # [k] bool  — degeneracy mask of the incumbent
+    f_best: jax.Array        # scalar f32 — f(C, P_C) on the incumbent's chunk
+    n_accepted: jax.Array    # scalar i32
+    n_dist_evals: jax.Array  # scalar f32 — paper's n_d counter (analytic)
+
+
+class ChunkInfo(NamedTuple):
+    f_new: jax.Array
+    accepted: jax.Array
+    lloyd_iters: jax.Array
+    n_degenerate: jax.Array
+
+
+def init_state(k: int, n: int) -> BigMeansState:
+    return BigMeansState(
+        centroids=jnp.zeros((k, n), jnp.float32),
+        degenerate=jnp.ones((k,), bool),
+        f_best=jnp.float32(jnp.inf),
+        n_accepted=jnp.int32(0),
+        n_dist_evals=jnp.float32(0.0),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_iters", "tol", "candidates", "impl")
+)
+def chunk_step(
+    points: jax.Array,
+    state: BigMeansState,
+    key: jax.Array,
+    *,
+    max_iters: int = 300,
+    tol: float = 1e-4,
+    candidates: int = 3,
+    impl: str = "auto",
+) -> tuple[BigMeansState, ChunkInfo]:
+    """Process one chunk P (Algorithm 3, lines 5-12)."""
+    k = state.centroids.shape[0]
+    s = points.shape[0]
+
+    # line 7: re-initialize degenerate centroids with K-means++ on this chunk
+    c_init = kmeanspp.seed(
+        points,
+        key,
+        k,
+        init=state.centroids,
+        degenerate=state.degenerate,
+        candidates=candidates,
+    )
+    # line 8: local search
+    res = kmeans.lloyd(points, c_init, max_iters=max_iters, tol=tol, impl=impl)
+
+    # lines 9-11: keep the best (objectives of equal-size chunks compared)
+    accepted = res.objective < state.f_best
+    n_deg = jnp.sum(state.degenerate)
+    n_d = state.n_dist_evals + jnp.float32(s) * (
+        jnp.float32(k) * (res.iterations + 2) + jnp.float32(candidates) * n_deg
+    )
+    new_state = BigMeansState(
+        centroids=jnp.where(accepted, res.centroids, state.centroids),
+        degenerate=jnp.where(accepted, res.degenerate, state.degenerate),
+        f_best=jnp.where(accepted, res.objective, state.f_best),
+        n_accepted=state.n_accepted + accepted.astype(jnp.int32),
+        n_dist_evals=n_d,
+    )
+    info = ChunkInfo(
+        f_new=res.objective,
+        accepted=accepted,
+        lloyd_iters=res.iterations,
+        n_degenerate=jnp.sum(res.degenerate),
+    )
+    return new_state, info
+
+
+def sample_chunk(
+    X: jax.Array, key: jax.Array, s: int, *, with_replacement: bool = True
+) -> jax.Array:
+    """Uniform random chunk of s rows (the paper's decomposition sampler).
+
+    With replacement by default: for s << m the two schemes are statistically
+    indistinguishable and the replacement-free path costs an O(m) permutation.
+    """
+    m = X.shape[0]
+    if with_replacement:
+        idx = jax.random.randint(key, (s,), 0, m)
+    else:
+        idx = jax.random.choice(key, m, (s,), replace=False)
+    return jnp.take(X, idx, axis=0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k", "s", "n_chunks", "max_iters", "tol", "candidates", "impl",
+        "with_replacement",
+    ),
+)
+def big_means(
+    X: jax.Array,
+    key: jax.Array,
+    *,
+    k: int,
+    s: int,
+    n_chunks: int,
+    max_iters: int = 300,
+    tol: float = 1e-4,
+    candidates: int = 3,
+    impl: str = "auto",
+    with_replacement: bool = True,
+) -> tuple[BigMeansState, ChunkInfo]:
+    """Sequential Big-means over an in-core dataset.  Returns (state, traces)."""
+    if X.dtype != jnp.bfloat16:
+        X = X.astype(jnp.float32)
+    state = init_state(k, X.shape[1])
+
+    def body(carry, key_i):
+        state = carry
+        ks, kc = jax.random.split(key_i)
+        chunk = sample_chunk(X, ks, s, with_replacement=with_replacement)
+        state, info = chunk_step(
+            chunk, state, kc,
+            max_iters=max_iters, tol=tol, candidates=candidates, impl=impl,
+        )
+        return state, info
+
+    keys = jax.random.split(key, n_chunks)
+    state, infos = jax.lax.scan(body, state, keys)
+    return state, infos
+
+
+def _exchange_best(state: BigMeansState, axis: str) -> BigMeansState:
+    """Keep-the-best across workers: tiny argmin-all-reduce on (f, C)."""
+    f_all = jax.lax.all_gather(state.f_best, axis)            # [W]
+    winner = jnp.argmin(f_all)
+    c_all = jax.lax.all_gather(state.centroids, axis)         # [W, k, n]
+    deg_all = jax.lax.all_gather(state.degenerate, axis)      # [W, k]
+    return state._replace(
+        centroids=c_all[winner],
+        degenerate=deg_all[winner],
+        f_best=f_all[winner],
+    )
+
+
+def big_means_sharded(
+    X: jax.Array,
+    key: jax.Array,
+    *,
+    mesh,
+    k: int,
+    s: int,
+    chunks_per_worker: int,
+    sync_every: int = 1,
+    axes: tuple[str, ...] = ("data",),
+    max_iters: int = 300,
+    tol: float = 1e-4,
+    candidates: int = 3,
+    impl: str = "auto",
+    with_replacement: bool = True,
+) -> tuple[BigMeansState, ChunkInfo]:
+    """Multi-worker Big-means: X row-sharded over ``axes``; per-worker chunk
+    streams with periodic incumbent exchange.
+
+    Each worker samples chunks from its local shard (uniform placement makes
+    local sampling equivalent to global sampling).  PRNG keys are folded with
+    the worker index, so results are reproducible for a fixed topology.
+    """
+    assert chunks_per_worker % sync_every == 0, "sync_every must divide chunks"
+    n_rounds = chunks_per_worker // sync_every
+    axis = axes if len(axes) > 1 else axes[0]
+
+    def worker(x_local, key):
+        widx = jax.lax.axis_index(axes[0])
+        if len(axes) > 1:
+            for a in axes[1:]:
+                widx = widx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        key = jax.random.fold_in(key, widx)
+        state = init_state(k, x_local.shape[1])
+
+        def round_body(state, key_r):
+            def body(state, key_i):
+                ks, kc = jax.random.split(key_i)
+                chunk = sample_chunk(
+                    x_local, ks, s, with_replacement=with_replacement
+                )
+                return chunk_step(
+                    chunk, state, kc,
+                    max_iters=max_iters, tol=tol,
+                    candidates=candidates, impl=impl,
+                )
+
+            keys = jax.random.split(key_r, sync_every)
+            state, infos = jax.lax.scan(body, state, keys)
+            state = _exchange_best(state, axis)
+            return state, infos
+
+        keys = jax.random.split(key, n_rounds)
+        state, infos = jax.lax.scan(round_body, state, keys)
+        infos = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), infos)
+        # distance-eval counter: aggregate across workers (paper's n_d).
+        total_nd = jax.lax.psum(state.n_dist_evals, axis)
+        total_acc = jax.lax.psum(state.n_accepted, axis)
+        state = state._replace(n_dist_evals=total_nd, n_accepted=total_acc)
+        return state, infos
+
+    shard = jax.shard_map(
+        worker,
+        mesh=mesh,
+        in_specs=(P(axes), P()),
+        out_specs=(
+            BigMeansState(P(), P(), P(), P(), P()),
+            ChunkInfo(*([P(axes[0])] * 4)),
+        ),
+        check_vma=False,
+    )
+    xd = X if X.dtype == jnp.bfloat16 else X.astype(jnp.float32)
+    return shard(xd, key)

@@ -1,0 +1,93 @@
+"""K-means (Lloyd) local search — Algorithm 1 of the paper.
+
+Implemented as a ``lax.while_loop`` over fused assignment/update steps so it
+jits, shards, and nests inside the Big-means chunk scan.  Convergence follows
+the paper's experimental setting: relative objective tolerance OR an
+iteration cap.  Degenerate (empty) clusters keep their previous position and
+are reported in the result mask — Big-means re-seeds them with K-means++ on
+the next chunk (the paper's degeneracy strategy).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+class KMeansResult(NamedTuple):
+    centroids: jax.Array       # [k, n] f32
+    objective: jax.Array       # scalar f32: f(C_final, P)
+    counts: jax.Array          # [k] f32 cluster sizes at the final assignment
+    degenerate: jax.Array      # [k] bool: counts == 0
+    iterations: jax.Array      # scalar i32: Lloyd iterations executed
+    assignments: jax.Array     # [m] i32
+
+
+class _Carry(NamedTuple):
+    centroids: jax.Array
+    f_prev: jax.Array
+    f_curr: jax.Array
+    it: jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "tol", "impl"))
+def lloyd(
+    points: jax.Array,
+    init_centroids: jax.Array,
+    weights: jax.Array | None = None,
+    *,
+    max_iters: int = 300,
+    tol: float = 1e-4,
+    impl: str = "auto",
+) -> KMeansResult:
+    """Run Lloyd's algorithm from ``init_centroids`` on an in-memory chunk.
+
+    ``weights`` enables the weighted variant used by coreset / K-means||
+    baselines (w_i multiplies both the objective and the centroid update).
+    """
+    if points.dtype != jnp.bfloat16:
+        points = points.astype(jnp.float32)
+    init_centroids = init_centroids.astype(jnp.float32)
+    k = init_centroids.shape[0]
+    inf = jnp.float32(jnp.inf)
+
+    def step(c):
+        # single-HBM-pass fused kernel on TPU; two-pass fallback elsewhere
+        sums, counts, f = ops.fused_step(points, c, weights=weights, impl=impl)
+        new_c = jnp.where(counts[:, None] > 0, sums / counts[:, None], c)
+        return new_c, f
+
+    def cond(s: _Carry):
+        # Relative-tolerance convergence on consecutive objectives (paper §5.7):
+        # stop when |f_prev - f_curr| <= tol * f_prev, or at the iteration cap.
+        # The first two iterations run unconditionally (f_prev/f_curr start inf).
+        converged = jnp.abs(s.f_prev - s.f_curr) <= tol * jnp.abs(s.f_prev)
+        return jnp.logical_and(
+            s.it < max_iters, jnp.logical_or(s.it < 2, ~converged)
+        )
+
+    def body(s: _Carry):
+        new_c, f = step(s.centroids)
+        return _Carry(new_c, s.f_curr, f, s.it + 1)
+
+    init = _Carry(init_centroids, inf, inf, jnp.int32(0))
+    final = jax.lax.while_loop(cond, body, init)
+
+    # One last assignment against the final centroids: exact f(C, P), final
+    # cluster sizes and the degeneracy mask (counts are those of the *final*
+    # centroids, which is what Big-means' re-seeding needs).
+    ids, d = ops.assign(points, final.centroids, impl=impl)
+    _, counts = ops.update(points, ids, k, weights=weights, impl=impl)
+    f = jnp.sum(d * weights) if weights is not None else jnp.sum(d)
+    return KMeansResult(
+        centroids=final.centroids,
+        objective=f,
+        counts=counts,
+        degenerate=counts == 0,
+        iterations=final.it,
+        assignments=ids,
+    )

@@ -1,0 +1,101 @@
+"""K-means++ seeding (Algorithm 2) and degenerate-cluster re-seeding.
+
+One routine covers both uses in the paper:
+
+* fresh seeding: all k slots are "degenerate" and get sampled;
+* Big-means re-initialization (Algorithm 3, line 7): only the degenerate
+  slots of the incumbent are re-sampled, distances are measured against the
+  union of surviving centroids and already-placed seeds.
+
+Following the paper's experimental setup, each new seed is chosen among
+``candidates`` (default 3) D^2-sampled proposals, keeping the one that
+minimizes the resulting potential ("greedy K-means++").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import pairwise_sqdist_ref
+
+_BIG = jnp.float32(1e30)
+
+
+def _safe_d2_logits(d: jax.Array) -> jax.Array:
+    """log-weights for D^2 sampling; uniform fallback when all distances are 0."""
+    total = jnp.sum(d)
+    logits = jnp.log(jnp.maximum(d, 1e-30))
+    return jnp.where(total > 0, logits, jnp.zeros_like(d))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "candidates"))
+def seed(
+    points: jax.Array,
+    key: jax.Array,
+    k: int,
+    *,
+    init: jax.Array | None = None,
+    degenerate: jax.Array | None = None,
+    candidates: int = 3,
+    weights: jax.Array | None = None,
+) -> jax.Array:
+    """Return [k, n] centroids; non-degenerate rows of ``init`` are kept.
+
+    ``weights`` (optional, [s]) makes this the weighted D^2 sampling used by
+    the coreset / K-means|| baselines: sampling probabilities and potentials
+    are both scaled by w_i.
+    """
+    if points.dtype != jnp.bfloat16:
+        points = points.astype(jnp.float32)
+    s, n = points.shape
+    w = None if weights is None else weights.astype(jnp.float32)
+
+    if init is None:
+        init = jnp.zeros((k, n), jnp.float32)
+        degenerate = jnp.ones((k,), bool)
+    init = init.astype(jnp.float32)
+    assert degenerate is not None
+
+    # Point norms hoisted out of the seeding loop: every candidate-distance
+    # probe below reads the chunk once (dot) instead of twice (dot + norm).
+    x2 = jnp.sum(jnp.square(points.astype(jnp.float32)), axis=-1,
+                 keepdims=True)
+
+    # Distance of every point to the nearest *surviving* centroid.
+    d_all = pairwise_sqdist_ref(points, init, x2)                 # [s, k]
+    d_all = jnp.where(degenerate[None, :], _BIG, d_all)
+    d0 = jnp.minimum(jnp.min(d_all, axis=1), _BIG)                # [s]
+
+    def body(j, carry):
+        key, c, d = carry
+        key, k1 = jax.random.split(key)
+        dw = d if w is None else d * w
+        logits = _safe_d2_logits(dw)
+        cand_idx = jax.random.categorical(k1, logits, shape=(candidates,))
+        cands = points[cand_idx]                                  # [L, n]
+        dc = pairwise_sqdist_ref(points, cands, x2)               # [s, L]
+        newd = jnp.minimum(d[:, None], dc)                        # [s, L]
+        pot = newd if w is None else newd * w[:, None]
+        potentials = jnp.sum(pot, axis=0)                         # [L]
+        b = jnp.argmin(potentials)
+        is_deg = degenerate[j]
+        chosen = jnp.where(is_deg, cands[b].astype(c.dtype), c[j])
+        d = jnp.where(is_deg, newd[:, b], d)
+        return key, c.at[j].set(chosen), d
+
+    _, c, _ = jax.lax.fori_loop(0, k, body, (key, init, d0))
+    return c
+
+
+def kmeanspp(
+    points: jax.Array,
+    key: jax.Array,
+    k: int,
+    *,
+    candidates: int = 3,
+    weights: jax.Array | None = None,
+):
+    """Fresh K-means++ seeding of k centers (paper Algorithm 2)."""
+    return seed(points, key, k, candidates=candidates, weights=weights)

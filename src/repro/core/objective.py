@@ -1,0 +1,49 @@
+"""MSSC objective (eq. (1) of the paper) and full-dataset evaluation."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def chunk_objective(
+    points: jax.Array,
+    centroids: jax.Array,
+    weights: jax.Array | None = None,
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """f(C, P) = sum_i w_i * min_j ||p_i - c_j||^2 on an in-memory chunk."""
+    _, d = ops.assign(points, centroids, impl=impl)
+    if weights is not None:
+        d = d * weights
+    return jnp.sum(d)
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "impl"))
+def full_objective(
+    points: jax.Array,
+    centroids: jax.Array,
+    *,
+    batch: int = 262144,
+    impl: str = "ref_chunked",
+) -> jax.Array:
+    """Objective over the whole dataset, streamed in batches (bounded RAM)."""
+    _, d = ops.assign(points, centroids, impl=impl, chunk=batch)
+    return jnp.sum(d)
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "impl"))
+def full_assignment(
+    points: jax.Array,
+    centroids: jax.Array,
+    *,
+    batch: int = 262144,
+    impl: str = "ref_chunked",
+) -> tuple[jax.Array, jax.Array]:
+    """Final pass of Algorithm 3 (line 14): assign every point to its centroid."""
+    ids, d = ops.assign(points, centroids, impl=impl, chunk=batch)
+    return ids, jnp.sum(d)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import gmm_dataset, paper_surrogate
+from repro.data.normalize import minmax_normalize

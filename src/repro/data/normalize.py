@@ -1,0 +1,26 @@
+"""Feature normalization (the paper evaluates min-max normalized variants)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def minmax_normalize(x: jax.Array, eps: float = 1e-12) -> jax.Array:
+    lo = jnp.min(x, axis=0, keepdims=True)
+    hi = jnp.max(x, axis=0, keepdims=True)
+    return (x - lo) / jnp.maximum(hi - lo, eps)
+
+
+def streaming_minmax(chunks) -> tuple[jax.Array, jax.Array]:
+    """One pass over an iterable of chunks -> (lo, hi) per feature.
+
+    The paper notes normalization is ideally folded into data collection; this
+    helper is the single-extra-pass fallback for stored datasets.
+    """
+    lo = hi = None
+    for c in chunks:
+        clo = jnp.min(c, axis=0)
+        chi = jnp.max(c, axis=0)
+        lo = clo if lo is None else jnp.minimum(lo, clo)
+        hi = chi if hi is None else jnp.maximum(hi, chi)
+    return lo, hi

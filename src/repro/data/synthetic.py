@@ -1,0 +1,87 @@
+"""Deterministic synthetic datasets.
+
+The paper's 19 real datasets are not reachable offline; benchmarks use
+Gaussian-mixture *surrogates* with the same (m, n) and a controlled cluster
+structure.  Generation is chunk-streamable: ``gmm_chunk(seed, chunk_id)``
+produces the same rows regardless of how many chunks are materialized at
+once, so the out-of-core runner and the in-core tests see identical data.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class GMMSpec(NamedTuple):
+    m: int                 # number of points
+    n: int                 # feature dimension
+    components: int        # true mixture components
+    spread: float = 5.0    # component-mean scale relative to unit noise
+    noise: float = 1.0
+    seed: int = 0
+
+
+def _component_params(spec: GMMSpec) -> tuple[jax.Array, jax.Array]:
+    key = jax.random.PRNGKey(spec.seed)
+    kmu, kw = jax.random.split(key)
+    means = jax.random.normal(kmu, (spec.components, spec.n)) * spec.spread
+    logits = jax.random.uniform(kw, (spec.components,), minval=-0.5, maxval=0.5)
+    return means, logits
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "chunk_size"))
+def gmm_chunk(spec: GMMSpec, chunk_id: int, chunk_size: int) -> jax.Array:
+    """Rows [chunk_id*chunk_size, ...) of the virtual dataset. [chunk_size, n]."""
+    means, logits = _component_params(spec)
+    key = jax.random.fold_in(jax.random.PRNGKey(spec.seed + 1), chunk_id)
+    kc, kn = jax.random.split(key)
+    comp = jax.random.categorical(kc, logits, shape=(chunk_size,))
+    noise = jax.random.normal(kn, (chunk_size, spec.n)) * spec.noise
+    return means[comp] + noise
+
+
+def gmm_dataset(spec: GMMSpec) -> jax.Array:
+    """Materialize the full [m, n] dataset (in-core use)."""
+    chunk = 1 << 16
+    nchunks = -(-spec.m // chunk)
+    parts = [np.asarray(gmm_chunk(spec, i, chunk)) for i in range(nchunks)]
+    return jnp.asarray(np.concatenate(parts, axis=0)[: spec.m])
+
+
+# (m, n) signatures of the paper's datasets (Table 1), used as surrogate
+# shapes in benchmarks — scaled down by `scale` to fit the CPU container.
+PAPER_DATASETS: dict[str, tuple[int, int]] = {
+    "cord19": (599616, 768),
+    "hepmass": (10500000, 28),
+    "uscensus": (2458285, 68),
+    "gisette": (13500, 5000),
+    "music": (106574, 518),
+    "protein": (145751, 74),
+    "miniboone": (130064, 50),
+    "mfcc": (85134, 58),
+    "isolet": (7797, 617),
+    "sensorless": (58509, 48),
+    "news": (39644, 58),
+    "gas": (13910, 128),
+    "road3d": (434874, 3),
+    "kegg": (53413, 20),
+    "skin": (245057, 3),
+    "shuttle": (58000, 9),
+    "eeg": (14980, 14),
+    "pla85900": (85900, 2),
+    "d15112": (15112, 2),
+}
+
+
+def paper_surrogate(
+    name: str, *, scale: float = 1.0, components: int = 25, seed: int = 0
+) -> tuple[GMMSpec, jax.Array]:
+    """GMM surrogate with the paper dataset's aspect (m scaled, n exact)."""
+    m, n = PAPER_DATASETS[name]
+    m = max(int(m * scale), 1024)
+    spec = GMMSpec(m=m, n=n, components=components, seed=seed)
+    return spec, gmm_dataset(spec)

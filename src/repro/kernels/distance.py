@@ -1,0 +1,142 @@
+"""Fused nearest-centroid assignment kernel (the K-means hot spot).
+
+TPU-native formulation: ``argmin_k ||x - c_k||^2`` is decomposed as
+``argmin_k (||c_k||^2 - 2 x.c_k)`` so the dominant term is a matmul that runs
+on the MXU; ``||x||^2`` is a per-point constant that is added back only for
+the reported distance value.  The kernel tiles (points x centroids x
+features) into VMEM blocks and keeps a running (min, argmin) accumulator in
+VMEM scratch across centroid tiles, accumulating the dot product across
+feature tiles.
+
+Grid: (point_tiles, centroid_tiles, feature_tiles), features innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INIT = 1e30  # large finite sentinel (avoids inf-inf traps in padding)
+
+
+def _assign_kernel(
+    x_ref,       # [bm, bf] f32
+    c_ref,       # [bk, bf] f32
+    csq_ref,     # [1, bk]  f32 (padded centroids hold _NEG_INIT)
+    id_ref,      # out [bm, 1] int32
+    d_ref,       # out [bm, 1] f32
+    acc_ref,     # scratch [bm, bk] f32: running -? dot accumulator
+    xsq_ref,     # scratch [bm, 1] f32: running ||x||^2
+    min_ref,     # scratch [bm, 1] f32
+    arg_ref,     # scratch [bm, 1] int32
+    *,
+    block_k: int,
+):
+    j = pl.program_id(1)
+    l = pl.program_id(2)
+    num_k = pl.num_programs(1)
+    num_f = pl.num_programs(2)
+
+    @pl.when(jnp.logical_and(j == 0, l == 0))
+    def _init_point_tile():
+        xsq_ref[...] = jnp.zeros_like(xsq_ref)
+        min_ref[...] = jnp.full_like(min_ref, _NEG_INIT)
+        arg_ref[...] = jnp.zeros_like(arg_ref)
+
+    @pl.when(l == 0)
+    def _init_k_tile():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    c = c_ref[...]
+    acc_ref[...] += jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(j == 0)
+    def _accum_xsq():
+        xsq_ref[...] += jnp.sum(x * x, axis=1, keepdims=True)
+
+    @pl.when(l == num_f - 1)
+    def _reduce_k_tile():
+        # score = ||c||^2 - 2 x.c  (constant ||x||^2 dropped for the argmin)
+        score = csq_ref[...] - 2.0 * acc_ref[...]          # [bm, bk]
+        tile_min = jnp.min(score, axis=1, keepdims=True)   # [bm, 1]
+        tile_arg = jnp.argmin(score, axis=1).astype(jnp.int32)[:, None]
+        better = tile_min < min_ref[...]
+        arg_ref[...] = jnp.where(better, j * block_k + tile_arg, arg_ref[...])
+        min_ref[...] = jnp.where(better, tile_min, min_ref[...])
+
+        @pl.when(j == num_k - 1)
+        def _finalize():
+            id_ref[...] = arg_ref[...]
+            d_ref[...] = jnp.maximum(min_ref[...] + xsq_ref[...], 0.0)
+
+
+def _pad_to(a: jax.Array, size: int, axis: int, value=0.0) -> jax.Array:
+    pad = size - a.shape[axis]
+    if pad <= 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_k", "block_f", "interpret")
+)
+def assign_pallas(
+    x: jax.Array,
+    c: jax.Array,
+    *,
+    block_m: int = 256,
+    block_k: int = 128,
+    block_f: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Pallas nearest-centroid assignment.  x [m,n], c [k,n] -> (ids, sqdist)."""
+    m, n = x.shape
+    k, n2 = c.shape
+    assert n == n2, (x.shape, c.shape)
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+
+    block_m = min(block_m, max(8, m))
+    bm = -(-m // block_m) * block_m
+    bk = -(-k // block_k) * block_k
+    bf = -(-n // block_f) * block_f
+
+    csq = jnp.sum(c * c, axis=-1)                          # true ||c||^2
+    xp = _pad_to(_pad_to(x, bm, 0), bf, 1)
+    cp = _pad_to(_pad_to(c, bk, 0), bf, 1)
+    csqp = _pad_to(csq[None, :], bk, 1, value=_NEG_INIT)   # padded c never wins
+
+    grid = (bm // block_m, bk // block_k, bf // block_f)
+    ids, d = pl.pallas_call(
+        functools.partial(_assign_kernel, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_f), lambda i, j, l: (i, l)),
+            pl.BlockSpec((block_k, block_f), lambda i, j, l: (j, l)),
+            pl.BlockSpec((1, block_k), lambda i, j, l: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, 1), lambda i, j, l: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i, j, l: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bm, 1), jnp.int32),
+            jax.ShapeDtypeStruct((bm, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_k), jnp.float32),
+            pltpu.VMEM((block_m, 1), jnp.float32),
+            pltpu.VMEM((block_m, 1), jnp.float32),
+            pltpu.VMEM((block_m, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xp, cp, csqp)
+    return ids[:m, 0], d[:m, 0]

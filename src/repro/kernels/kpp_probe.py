@@ -1,0 +1,109 @@
+"""K-means++ candidate-probe kernel: relaxed distances + potentials, fused.
+
+Each greedy K-means++ step evaluates L candidate seeds: for every point,
+``d_new = min(d, ||x - cand_l||^2)`` and the per-candidate potential
+``sum_x d_new``.  The jnp path materializes the [m, L] candidate-distance
+matrix and re-reads it for the min and the sum; this kernel streams the
+chunk once per step, computing the distance tile, the relaxed minimum and
+the potential column-sums in VMEM.
+
+Grid: (point_tiles,).  Candidates padded to the 128-lane tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BIG = 1e30
+MAX_L = 128
+MAX_N = 1024
+
+
+def _kpp_kernel(x_ref, c_ref, csq_ref, d_ref, newd_ref, pot_ref, *,
+                m: int, block_m: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _zero():
+        pot_ref[...] = jnp.zeros_like(pot_ref)
+
+    x = x_ref[...]                                           # [bm, n_pad]
+    c = c_ref[...]                                           # [L_pad, n_pad]
+    d = d_ref[...]                                           # [bm, 1]
+    xsq = jnp.sum(x * x, axis=1, keepdims=True)              # [bm, 1]
+    dc = csq_ref[...] - 2.0 * jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) + xsq            # [bm, L_pad]
+    dc = jnp.maximum(dc, 0.0)
+    newd = jnp.minimum(d, dc)                                # relaxed dists
+
+    rows = i * block_m + jax.lax.broadcasted_iota(
+        jnp.int32, (x.shape[0], 1), 0)
+    valid = (rows < m).astype(jnp.float32)
+    newd_ref[...] = newd
+    pot_ref[...] += jnp.sum(newd * valid, axis=0, keepdims=True)
+
+
+def _pad_to(a, size, axis, value=0.0):
+    pad = size - a.shape[axis]
+    if pad <= 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def fits(l: int, n: int) -> bool:
+    return l <= MAX_L and n <= MAX_N
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def kpp_probe_pallas(
+    x: jax.Array,
+    cands: jax.Array,
+    d: jax.Array,
+    *,
+    block_m: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """x [m,n], cands [L,n], d f32 [m] -> (newd f32 [m,L], potentials f32 [L])."""
+    m, n = x.shape
+    L = cands.shape[0]
+    assert fits(L, n), (L, n)
+    x = x.astype(jnp.float32)
+    cands = cands.astype(jnp.float32)
+
+    block_m = min(block_m, max(8, m))
+    bm = -(-m // block_m) * block_m
+    n_pad = -(-n // 128) * 128
+    L_pad = MAX_L
+
+    xp = _pad_to(_pad_to(x, bm, 0), n_pad, 1)
+    cp = _pad_to(_pad_to(cands, L_pad, 0), n_pad, 1)
+    csq = _pad_to(jnp.sum(cands * cands, axis=-1)[None, :], L_pad, 1,
+                  value=_BIG)
+    dp = _pad_to(d.astype(jnp.float32)[:, None], bm, 0)
+
+    newd, pot = pl.pallas_call(
+        functools.partial(_kpp_kernel, m=m, block_m=block_m),
+        grid=(bm // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, n_pad), lambda i: (i, 0)),
+            pl.BlockSpec((L_pad, n_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, L_pad), lambda i: (0, 0)),
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, L_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1, L_pad), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bm, L_pad), jnp.float32),
+            jax.ShapeDtypeStruct((1, L_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, cp, csq, dp)
+    return newd[:m, :L], pot[0, :L]

@@ -1,0 +1,137 @@
+"""Jit'd public wrappers around the K-means kernels.
+
+Dispatch policy
+---------------
+``impl='auto'`` resolves to the compiled Pallas kernel on TPU backends and to
+the pure-jnp reference elsewhere (this container is CPU-only; Pallas runs
+there in interpret mode, which we reserve for tests).  Every wrapper accepts
+``impl`` overrides:
+
+* ``'pallas'``            — compiled Pallas (TPU target)
+* ``'pallas_interpret'``  — Pallas interpret mode (CPU correctness testing)
+* ``'ref'``               — single-shot jnp oracle
+* ``'ref_chunked'``       — jnp oracle, lax.map over point blocks (bounds the
+                            [m,k] distance-matrix working set for big m)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.distance import assign_pallas
+from repro.kernels.update import update_pallas
+
+_DEFAULT_IMPL = None
+
+
+def default_impl() -> str:
+    global _DEFAULT_IMPL
+    if _DEFAULT_IMPL is None:
+        _DEFAULT_IMPL = (
+            "pallas" if jax.default_backend() == "tpu" else "ref"
+        )
+    return _DEFAULT_IMPL
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    _DEFAULT_IMPL = impl
+
+
+def assign(
+    x: jax.Array,
+    c: jax.Array,
+    *,
+    impl: str = "auto",
+    chunk: int = 65536,
+) -> tuple[jax.Array, jax.Array]:
+    """Nearest-centroid assignment.  x [m,n], c [k,n] -> (ids i32 [m], d f32 [m])."""
+    if impl == "auto":
+        impl = default_impl()
+    if impl == "pallas":
+        return assign_pallas(x, c)
+    if impl == "pallas_interpret":
+        return assign_pallas(x, c, interpret=True)
+    if impl == "ref":
+        return ref.assign_ref(x, c)
+    if impl == "ref_chunked":
+        return _assign_chunked(x, c, chunk=chunk)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _assign_chunked(x, c, *, chunk):
+    m = x.shape[0]
+    if m <= chunk:
+        return ref.assign_ref(x, c)
+    nblk = -(-m // chunk)
+    pad = nblk * chunk - m
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    xb = xp.reshape(nblk, chunk, x.shape[1])
+    ids, d = jax.lax.map(lambda xi: ref.assign_ref(xi, c), xb)
+    return ids.reshape(-1)[:m], d.reshape(-1)[:m]
+
+
+def update(
+    x: jax.Array,
+    ids: jax.Array,
+    k: int,
+    *,
+    weights: jax.Array | None = None,
+    impl: str = "auto",
+) -> tuple[jax.Array, jax.Array]:
+    """Cluster sums/counts.  x [m,n], ids [m] -> (sums [k,n], counts [k])."""
+    if impl == "auto":
+        impl = default_impl()
+    if weights is not None:
+        # Weighted path stays on the jnp oracle (cold path: coresets, K-means||).
+        return ref.update_ref(x, ids, k, weights)
+    if impl == "pallas":
+        return update_pallas(x, ids, k)
+    if impl == "pallas_interpret":
+        return update_pallas(x, ids, k, interpret=True)
+    if impl in ("ref", "ref_chunked"):
+        return ref.update_ref(x, ids, k)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def assign_and_update(
+    x: jax.Array,
+    c: jax.Array,
+    *,
+    weights: jax.Array | None = None,
+    impl: str = "auto",
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One fused Lloyd step's statistics: (ids, d, sums, counts)."""
+    ids, d = assign(x, c, impl=impl)
+    sums, counts = update(x, ids, c.shape[0], weights=weights, impl=impl)
+    return ids, d, sums, counts
+
+
+def fused_step(
+    x: jax.Array,
+    c: jax.Array,
+    *,
+    weights: jax.Array | None = None,
+    impl: str = "auto",
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One Lloyd iteration's (sums, counts, objective) — single-HBM-pass
+    Pallas kernel when the (k, n) envelope fits, two-pass fallback
+    otherwise."""
+    from repro.kernels import fused_step as fused
+
+    if impl == "auto":
+        impl = default_impl()
+    k, n = c.shape[0], c.shape[1]
+    if weights is None and fused.fits(k, n):
+        if impl == "pallas":
+            return fused.fused_step_pallas(x, c)
+        if impl == "pallas_interpret":
+            return fused.fused_step_pallas(x, c, interpret=True)
+    ids, d = assign(x, c, impl=impl if impl.startswith("ref") else "ref")
+    sums, counts = update(x, ids, k, weights=weights, impl="ref")
+    obj = jnp.sum(d * weights) if weights is not None else jnp.sum(d)
+    return sums, counts, obj

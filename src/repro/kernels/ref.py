@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantic ground truth: every Pallas kernel in this package has
+an ``*_ref`` twin here and tests assert allclose between the two across shape
+and dtype sweeps. They are also the production path on non-TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sqdist_ref(x: jax.Array, c: jax.Array,
+                        x2: jax.Array | None = None) -> jax.Array:
+    """Squared euclidean distances between rows of x [m,n] and c [k,n] -> [m,k].
+
+    Accumulation is always fp32; if the *data* arrives in bf16 the dominant
+    matmul reads it at half the bytes (mixed-precision streaming — §Perf
+    cluster cell).  ``x2`` (optional [m,1]) lets callers hoist the point
+    norms out of loops that probe many candidate centroid sets (K-means++
+    seeding reads the chunk once per slot instead of twice)."""
+    if x.dtype == jnp.bfloat16:
+        xd, cd = x, c.astype(jnp.bfloat16)
+    else:
+        xd, cd = x.astype(jnp.float32), c.astype(jnp.float32)
+    if x2 is None:
+        x2 = jnp.sum(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    c2 = jnp.sum(jnp.square(c.astype(jnp.float32)), axis=-1)[None, :]
+    dots = jax.lax.dot_general(
+        xd, cd, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    d = x2 - 2.0 * dots + c2
+    return jnp.maximum(d, 0.0)
+
+
+def assign_ref(x: jax.Array, c: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Nearest-centroid assignment.
+
+    Returns (ids int32 [m], sq_dist f32 [m]).
+    """
+    d = pairwise_sqdist_ref(x, c)
+    ids = jnp.argmin(d, axis=1).astype(jnp.int32)
+    mind = jnp.min(d, axis=1)
+    return ids, mind
+
+
+def update_ref(
+    x: jax.Array,
+    ids: jax.Array,
+    k: int,
+    weights: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Centroid-update statistics: per-cluster feature sums and counts.
+
+    Returns (sums f32 [k,n], counts f32 [k]).  ``ids`` entries outside
+    [0, k) contribute nothing (used for padding).  bf16 data is read at
+    half bytes; accumulation stays fp32.
+    """
+    xd = x if x.dtype == jnp.bfloat16 else x.astype(jnp.float32)
+    onehot = jax.nn.one_hot(ids, k, dtype=xd.dtype)        # [m,k]; oob -> 0s
+    if weights is not None:
+        onehot = onehot * weights.astype(onehot.dtype)[:, None]
+    sums = jax.lax.dot_general(
+        onehot, xd, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # [k,n]
+    counts = jnp.sum(onehot.astype(jnp.float32), axis=0)   # [k]
+    return sums, counts
+
+
+def min_update_ref(d: jax.Array, x: jax.Array, c_new: jax.Array) -> jax.Array:
+    """K-means++ distance relaxation: d <- min(d, ||x - c_new||^2).
+
+    d [m], x [m,n], c_new [n] -> [m].
+    """
+    x = x.astype(jnp.float32)
+    c_new = c_new.astype(jnp.float32)
+    diff = x - c_new[None, :]
+    d_new = jnp.sum(diff * diff, axis=-1)
+    return jnp.minimum(d, d_new)

@@ -1,0 +1,110 @@
+"""Centroid-update kernel: per-cluster sums and counts.
+
+GPU codes use scatter-add for this step; TPUs execute scatters poorly.  The
+TPU-native adaptation builds a one-hot membership tile in VMEM and contracts
+it against the point tile on the MXU:
+
+    sums[k_tile, f_tile] += onehot(ids_tile).T @ x_tile
+    counts[k_tile]       += onehot(ids_tile).sum(axis=0)
+
+Grid: (centroid_tiles, feature_tiles, point_tiles), points innermost, so the
+output block stays resident in VMEM while the point stream flows through.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _update_kernel(
+    x_ref,        # [bm, bf] f32
+    ids_ref,      # [bm, 1] int32 (padding rows hold -1)
+    sums_ref,     # out [bk, bf] f32 (accumulated across point tiles)
+    counts_ref,   # out [1, bk] f32
+    *,
+    block_k: int,
+):
+    j = pl.program_id(0)   # centroid tile
+    l = pl.program_id(1)   # feature tile
+    i = pl.program_id(2)   # point tile
+
+    @pl.when(i == 0)
+    def _zero_out():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+
+        @pl.when(l == 0)
+        def _zero_counts():
+            counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    ids = ids_ref[...]                                       # [bm, 1]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (ids.shape[0], block_k), 1)
+    onehot = (ids == j * block_k + lane).astype(jnp.float32)  # [bm, bk]
+
+    x = x_ref[...]
+    sums_ref[...] += jax.lax.dot_general(
+        onehot, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(l == 0)
+    def _accum_counts():
+        counts_ref[...] += jnp.sum(onehot, axis=0, keepdims=True)
+
+
+def _pad_to(a, size, axis, value=0):
+    pad = size - a.shape[axis]
+    if pad <= 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "block_m", "block_k", "block_f", "interpret"),
+)
+def update_pallas(
+    x: jax.Array,
+    ids: jax.Array,
+    k: int,
+    *,
+    block_m: int = 256,
+    block_k: int = 128,
+    block_f: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """x [m,n], ids [m] int32 -> (sums f32 [k,n], counts f32 [k])."""
+    m, n = x.shape
+    x = x.astype(jnp.float32)
+    ids = ids.astype(jnp.int32)
+
+    block_m = min(block_m, max(8, m))
+    bm = -(-m // block_m) * block_m
+    bk = -(-k // block_k) * block_k
+    bf = -(-n // block_f) * block_f
+
+    xp = _pad_to(_pad_to(x, bm, 0), bf, 1)
+    idsp = _pad_to(ids[:, None], bm, 0, value=-1)            # padding never hits
+
+    grid = (bk // block_k, bf // block_f, bm // block_m)
+    sums, counts = pl.pallas_call(
+        functools.partial(_update_kernel, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_f), lambda j, l, i: (i, l)),
+            pl.BlockSpec((block_m, 1), lambda j, l, i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_k, block_f), lambda j, l, i: (j, l)),
+            pl.BlockSpec((1, block_k), lambda j, l, i: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bk, bf), jnp.float32),
+            jax.ShapeDtypeStruct((1, bk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, idsp)
+    return sums[:k, :n], counts[0, :k]

@@ -1,0 +1,95 @@
+"""Collective-traffic extraction from optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` has no collective-bytes entry, so we parse the
+per-device HLO module: every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute instruction contributes the byte size of its
+operands (per the roofline spec).  Async pairs (-start/-done) are counted
+once, at the -start.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _shapes_bytes(text: str) -> int:
+    return sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(text))
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Return {'total': int, 'count': int, 'by_op': {op: bytes}, ...}."""
+    defs: dict[str, int] = {}
+    pending = []            # (op, operand_names, inline_bytes, result_bytes)
+
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # result type = everything before the opcode token
+        op_m = re.search(r"\b([a-z][a-z0-9\-]*)\(", rhs)
+        result_part = rhs[: op_m.start()] if op_m else rhs
+        defs[name] = _shapes_bytes(result_part)
+        if not op_m:
+            continue
+        op = op_m.group(1)
+        base = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done"):
+            continue
+        if base not in _COLLECTIVES:
+            continue
+        args_part = rhs[op_m.end():]
+        # strip trailing attributes (replica_groups=...) conservatively:
+        depth, end = 1, len(args_part)
+        for i, ch in enumerate(args_part):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        args = args_part[:end]
+        operand_names = re.findall(r"%([\w.\-]+)", args)
+        inline = _shapes_bytes(args)
+        pending.append((base, operand_names, inline, defs[name]))
+
+    by_op: dict[str, int] = defaultdict(int)
+    by_op_count: dict[str, int] = defaultdict(int)
+    total = 0
+    for base, operands, inline, result in pending:
+        looked_up = sum(defs.get(o, 0) for o in operands)
+        nbytes = inline or looked_up or result
+        by_op[base] += nbytes
+        by_op_count[base] += 1
+        total += nbytes
+    return {
+        "total": int(total),
+        "count": int(sum(by_op_count.values())),
+        "by_op": {k: int(v) for k, v in sorted(by_op.items())},
+        "by_op_count": {k: int(v) for k, v in sorted(by_op_count.items())},
+    }

@@ -1,0 +1,91 @@
+"""Per-instruction byte/flop attribution from optimized HLO text — the
+"profiler" of the dry-run world (DESIGN.md §6b).  Groups operand+result
+bytes by opcode and reports the top single instructions, so §Perf iterations
+aim at the真 dominant traffic instead of folklore."""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+from repro.launch.hlo_analysis import _DEF_RE, _SHAPE_RE, _shape_bytes
+
+
+def profile(hlo_text: str, top: int = 25):
+    defs: dict[str, int] = {}
+    rows = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        op_m = re.search(r"\b([a-z][a-z0-9\-]*)\(", rhs)
+        result_part = rhs[: op_m.start()] if op_m else rhs
+        out_bytes = sum(_shape_bytes(d, dims)
+                        for d, dims in _SHAPE_RE.findall(result_part))
+        defs[name] = out_bytes
+        if not op_m:
+            continue
+        op = op_m.group(1)
+        args_part = rhs[op_m.end():]
+        depth, end = 1, len(args_part)
+        for i, ch in enumerate(args_part):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_names = re.findall(r"%([\w.\-]+)", args_part[:end])
+        in_bytes = sum(defs.get(o, 0) for o in operand_names)
+        rows.append((op, name, in_bytes + out_bytes,
+                     line.split("metadata", 1)[-1][:120]))
+    by_op = defaultdict(lambda: [0, 0])
+    for op, name, b, _ in rows:
+        by_op[op][0] += b
+        by_op[op][1] += 1
+    summary = sorted(by_op.items(), key=lambda kv: -kv[1][0])
+    top_rows = sorted(rows, key=lambda r: -r[2])[:top]
+    return summary, top_rows
+
+
+if __name__ == "__main__":
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import argparse
+    import dataclasses
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--set", default="")
+    args = ap.parse_args()
+
+    from repro.launch.perf import apply_flags
+    settings = dict(kv.split("=") for kv in filter(None, args.set.split(",")))
+    apply_flags(settings)
+
+    from repro.configs.shapes import SHAPES
+    from repro.launch.dryrun import _compile_and_cost
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import flags
+    from repro.models.registry import get_config
+
+    cfg = get_config(args.arch)
+    cfg = dataclasses.replace(
+        cfg, num_layers=args.layers,
+        encoder_layers=args.layers if cfg.encoder_layers else 0)
+    flags.UNROLL_SCAN = True
+    mesh = make_production_mesh()
+    compiled, cost = _compile_and_cost(cfg, SHAPES[args.shape], mesh)
+    summary, top_rows = profile(compiled.as_text())
+    total = sum(v[0] for _, v in summary)
+    print(f"total attributed bytes/device: {total:.3e} "
+          f"(cost_analysis: {cost['bytes']:.3e})")
+    print("\n-- by opcode --")
+    for op, (b, c) in summary[:18]:
+        print(f"{op:24s} {b:.3e}  x{c}")
+    print("\n-- top instructions --")
+    for op, name, b, meta in top_rows:
+        print(f"{b: .3e}  {op:18s} {name:28s} {meta[:90]}")

@@ -1,0 +1,85 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (must precede any jax import — see dryrun.py)
+
+"""Perf-iteration runner (EXPERIMENTS.md §Perf).
+
+Compiles one (arch x shape) cell on the single-pod mesh with a named set of
+optimization flags and appends the roofline record to results/perf.jsonl:
+
+    PYTHONPATH=src python -m repro.launch.perf --arch llama3.2-1b \
+        --shape train_4k --variant blockwise --set blockwise_attn=1024
+
+Variants compare against the paper-faithful/naive `base` variant; each run
+records the flag dictionary so the EXPERIMENTS log can show
+hypothesis -> change -> before -> after.
+"""
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+from repro.models import flags            # noqa: E402
+
+
+def apply_flags(settings: dict):
+    if "blockwise_attn" in settings:
+        flags.BLOCKWISE_ATTN = int(settings["blockwise_attn"])
+    if "bf16_grads" in settings:
+        flags.BF16_GRADS = bool(int(settings["bf16_grads"]))
+    if "chunked_loss" in settings:
+        flags.CHUNKED_LOSS = int(settings["chunked_loss"])
+    if "serve_moe_cap" in settings:
+        flags.SERVE_MOE_CAP = float(settings["serve_moe_cap"])
+    if "attn_bf16_softmax" in settings:
+        flags.ATTN_BF16_SOFTMAX = bool(int(settings["attn_bf16_softmax"]))
+    if "rope_bf16" in settings:
+        flags.ROPE_BF16 = bool(int(settings["rope_bf16"]))
+    if "seq_parallel" in settings:
+        flags.SEQ_PARALLEL = bool(int(settings["seq_parallel"]))
+    if "cache_carry" in settings:
+        flags.DECODE_CACHE_CARRY = bool(int(settings["cache_carry"]))
+    if "remat" in settings:
+        flags.REMAT_POLICY = settings["remat"]
+    if "cluster_bf16" in settings:
+        flags.CLUSTER_BF16 = bool(int(settings["cluster_bf16"]))
+    if "kv_seq" in settings:
+        flags.KV_SHARD_SEQ = bool(int(settings["kv_seq"]))
+    if "ssd_bf16" in settings:
+        flags.SSD_BF16 = bool(int(settings["ssd_bf16"]))
+    if "moe_groups" in settings:
+        flags.MOE_GROUPED_DISPATCH = int(settings["moe_groups"])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--set", default="",
+                    help="comma list k=v: blockwise_attn, bf16_grads, "
+                         "chunked_loss, serve_moe_cap")
+    ap.add_argument("--json", default="results/perf.jsonl")
+    args = ap.parse_args()
+
+    settings = {}
+    for kv in filter(None, args.set.split(",")):
+        k, v = kv.split("=")
+        settings[k.strip()] = v.strip()
+    apply_flags(settings)
+
+    rec = run_cell(args.arch, args.shape, multi_pod=False)
+    rec["variant"] = args.variant
+    rec["flags"] = settings
+    with open(args.json, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    r = rec.get("roofline", {})
+    print(f"[perf] {args.arch} x {args.shape} [{args.variant}] "
+          f"compute={r.get('compute_s', 0):.4f}s "
+          f"memory={r.get('memory_s', 0):.4f}s "
+          f"collective={r.get('collective_s', 0):.4f}s "
+          f"dominant={r.get('dominant')} frac={r.get('roofline_fraction', 0):.4f}")
+
+
+if __name__ == "__main__":
+    main()

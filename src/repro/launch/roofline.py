@@ -1,0 +1,48 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+TPU v5e constants (per chip):
+    peak bf16 compute  197 TFLOP/s
+    HBM bandwidth      819 GB/s
+    ICI                ~50 GB/s per link
+
+Terms (per device, from the post-SPMD per-device module):
+    compute    = HLO_FLOPs_device / peak
+    memory     = HLO_bytes_device / hbm_bw
+    collective = collective_operand_bytes_device / ici_bw
+
+Ring/tree constant factors are deliberately folded out — terms are compared
+*across cells and iterations*, not against wall clocks (CPU-only container).
+"""
+from __future__ import annotations
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def roofline_terms(flops_dev: float, bytes_dev: float, coll_bytes_dev: float):
+    compute = flops_dev / PEAK_FLOPS
+    memory = bytes_dev / HBM_BW
+    collective = coll_bytes_dev / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    # "roofline fraction": useful compute time / achievable step time if the
+    # dominant term fully overlaps the others (ideal async schedule).
+    frac = compute / bound if bound > 0 else 0.0
+    return {**terms, "dominant": dominant.replace("_s", ""),
+            "bound_s": bound, "roofline_fraction": frac}
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active params."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,111 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs`` returns abstract model inputs (weak-type-correct, no device
+allocation); ``*_shardings`` map them (and params / optimizer state / caches)
+onto the production mesh.  Modality frontends are stubs: precomputed
+patch/frame embeddings appear directly as inputs, per the assignment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.models import transformer as T
+from repro.train import sharding as sh
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def text_len(cfg, seq_len: int) -> int:
+    """VLM cells split the assigned seq_len into image prefix + text."""
+    if cfg.family == "vlm":
+        return seq_len - cfg.frontend_len
+    return seq_len
+
+
+def input_specs(cfg, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    St = text_len(cfg, S)
+    if shape.kind == "train":
+        specs = {
+            "tokens": _sds((B, St), jnp.int32),
+            "labels": _sds((B, St), jnp.int32),
+        }
+        if cfg.frontend:
+            flen = cfg.frontend_len
+            specs["frontend"] = _sds((B, flen, cfg.frontend_dim), jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((B, St), jnp.int32)}
+        if cfg.frontend:
+            specs["frontend"] = _sds(
+                (B, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16)
+        return specs
+    if shape.kind == "decode":
+        cache = T.abstract_cache(
+            cfg, B, S,
+            enc_len=cfg.frontend_len if cfg.cross_attention else None)
+        return {
+            "cache": cache,
+            "token": _sds((B, 1), jnp.int32),
+            "pos": _sds((), jnp.int32),
+        }
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+def batch_sharding(mesh: Mesh, spec_tree):
+    """Shard dim 0 (global batch) over the batch axes where divisible."""
+
+    def leaf(x):
+        logical = ("batch",) + (None,) * (len(x.shape) - 1)
+        return NamedSharding(mesh, sh.spec(mesh, *logical, shape=x.shape))
+
+    return jax.tree.map(leaf, spec_tree)
+
+
+def cache_shardings(mesh: Mesh, cache_spec):
+    """KV/SSM cache: batch over data axes; if batch is unshardable (B=1,
+    long-context), shard the *sequence* dim instead (flash-decoding style);
+    heads/channels over the model axis where divisible."""
+
+    def leaf(path, x):
+        name = None
+        for part in reversed(path):
+            k = getattr(part, "key", None)
+            if isinstance(k, str):
+                name = k
+                break
+        shp = x.shape
+        if name in ("k", "v", "cross_k", "cross_v"):
+            # [L, B, S, KV, hd]
+            logical = list(sh.kv_cache_logical(mesh, shp))
+        elif name == "conv":
+            # [L, B, w-1, C]
+            logical = [None, "batch", None, "model"]
+        elif name == "state":
+            # [L, B, H, P, N]
+            logical = [None, "batch", "model", None, None]
+        else:
+            logical = [None] * len(shp)
+        return NamedSharding(mesh, sh.spec(mesh, *logical, shape=shp))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_spec)
+
+
+def input_shardings(mesh: Mesh, cfg, shape: ShapeSpec, specs: dict) -> dict:
+    out = {}
+    for k, v in specs.items():
+        if k == "cache":
+            out[k] = cache_shardings(mesh, v)
+        elif k == "pos":
+            out[k] = NamedSharding(mesh, P())
+        else:
+            out[k] = batch_sharding(mesh, v)
+    return out

@@ -1,0 +1,58 @@
+"""Clustering launcher (the paper's workload is training-like).
+
+    PYTHONPATH=src python -m repro.launch.train --arch bigmeans_paper \
+        --chunks 200 --scale 0.02 --ckpt /tmp/bigmeans_run
+
+Runs the host-streaming Big-means driver on a synthetic surrogate of the
+configured stream; ``--workers N`` switches to the sharded in-core driver
+over N forced host devices (spawn with XLA_FLAGS yourself in that case).
+For LM training smoke runs see ``examples/`` and the dry-run launcher.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.cluster import runner
+from repro.data.synthetic import GMMSpec, gmm_chunk
+from repro.models.registry import get_config
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="bigmeans_paper")
+    ap.add_argument("--chunks", type=int, default=200)
+    ap.add_argument("--scale", type=float, default=0.02,
+                    help="scale factor on the configured stream size")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--time-budget", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    assert cfg.family == "cluster", "use dryrun.py / examples for LM archs"
+    m = max(int(cfg.m * args.scale), cfg.s * 2)
+    spec = GMMSpec(m=m, n=cfg.n_features, components=cfg.k, spread=4.0,
+                   seed=args.seed)
+
+    rcfg = runner.RunnerConfig(
+        k=cfg.k, s=cfg.s, n_chunks=args.chunks,
+        max_iters=cfg.max_iters, tol=cfg.tol, candidates=cfg.candidates,
+        time_budget_s=args.time_budget, ckpt_dir=args.ckpt,
+        seed=args.seed)
+
+    print(f"[train] {args.arch}: m={m} n={cfg.n_features} k={cfg.k} "
+          f"s={cfg.s} chunks={args.chunks}")
+    state, metrics = runner.run(
+        lambda cid: np.asarray(gmm_chunk(spec, cid, cfg.s)), rcfg,
+        n_features=cfg.n_features)
+    print(f"[train] done: f_best={metrics.f_best:.6e} "
+          f"accepted={metrics.accepted}/{metrics.chunks_done} "
+          f"failed={metrics.chunks_failed} wall={metrics.wall_time_s:.1f}s "
+          f"n_d={float(state.n_dist_evals):.3e}")
+
+
+if __name__ == "__main__":
+    main()

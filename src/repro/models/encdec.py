@@ -1,0 +1,69 @@
+"""Encoder–decoder model (seamless-m4t backbone).
+
+The audio frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings [B, S_src, frontend_dim]; a linear projection
+maps them into the encoder width.  12 encoder layers (bidirectional self
+attention) + 12 decoder layers (causal self-attention + cross-attention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.train.sharding import shard
+
+
+def encode(cfg: ModelConfig, p, frames):
+    """frames [B, S_src, frontend_dim] -> enc_out [B, S_src, D]."""
+    x = jnp.einsum("bsr,rd->bsd", L.cast(frames), L.cast(p["frontend_proj"]))
+    x = shard(x, "batch", None, None)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x, _ = T.run_stack(cfg, p["encoder"], x, positions,
+                       n_layers=cfg.encoder_layers, causal=False)
+    return L.rmsnorm(x, p["encoder_norm"]["scale"], cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, p, tokens, frames, *, collect_cache=False):
+    """Teacher-forced decoder pass.  Returns (logits [B,St,V], caches)."""
+    enc_out = encode(cfg, p, frames)
+    x = T.embed(cfg, p, tokens)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x, caches = T.run_stack(cfg, p["layers"], x, positions,
+                            causal=True, enc_out=enc_out,
+                            collect_cache=collect_cache)
+    return T.unembed(cfg, p, x), caches
+
+
+def loss_fn(cfg: ModelConfig, p, batch):
+    logits, _ = forward(cfg, p, batch["tokens"], batch["frontend"])
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return jnp.sum(jnp.where(valid, nll, 0.0)) / jnp.maximum(jnp.sum(valid), 1)
+
+
+def prefill(cfg: ModelConfig, p, tokens, frames, max_seq: int):
+    logits, caches = forward(cfg, p, tokens, frames, collect_cache=True)
+    B = tokens.shape[0]
+    cache = T.init_cache(cfg, B, max_seq, enc_len=frames.shape[1])
+    kpre = caches["k"].astype(cache["k"].dtype)
+    vpre = caches["v"].astype(cache["v"].dtype)
+    cache["k"] = jax.lax.dynamic_update_slice(cache["k"], kpre, (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vpre, (0, 0, 0, 0, 0))
+    cache["cross_k"] = caches["cross_k"].astype(cache["cross_k"].dtype)
+    cache["cross_v"] = caches["cross_v"].astype(cache["cross_v"].dtype)
+    return logits[:, -1, :], cache
+
+
+def decode_step(cfg: ModelConfig, p, cache, token, pos):
+    x = T.embed(cfg, p, token)
+    x, new_cache = T.run_stack_decode(cfg, p["layers"], x, cache, pos)
+    logits = T.unembed(cfg, p, x)[:, 0, :]
+    return logits, new_cache

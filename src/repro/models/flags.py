@@ -1,0 +1,85 @@
+"""Trace-time switches.
+
+UNROLL_SCAN: XLA's HLO cost analysis visits a while-loop body once,
+regardless of trip count, so the scanned layer stack under-reports
+flops/bytes/collectives by ~L.  The dry-run cost pass flips this flag to
+fully unroll every structural scan (layer stack, SSD chunk recurrence) so the
+compiled module's cost analysis counts every layer.  The deliverable compile
+(memory analysis, artifact) keeps the scanned form.
+"""
+UNROLL_SCAN = False
+
+
+def scan_unroll(length: int) -> int:
+    return length if UNROLL_SCAN else 1
+
+
+# --- beyond-paper performance switches (EXPERIMENTS.md §Perf) --------------
+# Blockwise (flash-style) attention: online-softmax scan over KV blocks of
+# this size; the S x S logit matrix never exists in HBM.  None = baseline
+# (materialized logits).
+BLOCKWISE_ATTN: int | None = None
+
+# Mixed-precision gradients: loss is differentiated against a bf16 copy of
+# the params, so FSDP gradient reduce-scatters move half the bytes; the
+# optimizer still applies fp32 master updates.
+BF16_GRADS: bool = False
+
+# Chunked cross-entropy: logits are produced and consumed in sequence chunks
+# of this many tokens (rematerialized in backward) instead of one [B,S,V]
+# fp32 tensor.  None = baseline.
+CHUNKED_LOSS: int | None = None
+
+# Serving MoE capacity factor: the baseline decode path uses capacity = T
+# (zero drops, up to E/topk x overcompute).  Setting this to e.g. 2.0 sizes
+# expert buffers at 2x the average load instead.  None = baseline.
+SERVE_MOE_CAP: float | None = None
+
+# bf16 attention softmax pipeline: logits, mask-select, exp and the
+# weighted-value einsum all stay bf16 (row max still subtracted), and the
+# 1/sqrt(hd) scale is folded into Q (one less op over the S x S tensor).
+# Halves every S^2-sized HBM access.
+ATTN_BF16_SOFTMAX: bool = False
+
+# Rotary embedding arithmetic in bf16 (tables in fp32).
+ROPE_BF16: bool = False
+
+# Megatron-style sequence parallelism: the residual stream between TP blocks
+# is sharded along S over the model axis, so norms/residuals/casts run on
+# 1/TP-size tensors and the TP boundary becomes reduce-scatter + all-gather
+# instead of a full all-reduce.
+SEQ_PARALLEL: bool = False
+
+# Decode: thread the KV/SSM cache through the layer scan as an aliased
+# *carry* (in-place dynamic-update-slice on loop state) instead of xs/ys
+# streams, eliminating the full-cache copies at the loop boundary.
+DECODE_CACHE_CARRY: bool = False
+
+# Remat policy: 'full' recomputes the whole layer in backward (minimum
+# memory); 'dots' saves the outputs of weight matmuls (qkv/mlp projections,
+# no-batch-dim dots) so backward skips their recompute — right trade for
+# small models whose optimizer state is far below HBM capacity.
+REMAT_POLICY: str = "full"
+
+# Grouped MoE dispatch: tokens are routed within data-shard groups with
+# per-group capacity, so the dispatch gather is shard-local and the
+# group->expert resharding lowers to all-to-all instead of masked
+# all-reduces.  -1 = auto (one group per batch shard of the active mesh —
+# adopted default after §Perf: deepseek prefill bound −31.7%, qwen3 train
+# bound −53%); 0 = off (paper-faithful naive dispatch); >0 = explicit.
+MOE_GROUPED_DISPATCH: int = -1
+
+# Cluster cell: stream the dataset/chunks in bf16 (fp32 accumulation).
+CLUSTER_BF16: bool = False
+
+# KV cache sharding fallback: when KV heads don't divide the model axis
+# (GQA), shard the cache *sequence* dim over it (flash-decoding partial
+# softmax) instead of replicating the cache TP-ways.  Default ON after the
+# §Perf measurement (decode memory term −6..7x on llama/qwen3); the §Perf
+# baselines were recorded with it off.
+KV_SHARD_SEQ: bool = True
+
+# SSD (mamba2/hymba): keep the [B, nc, Q, Q, H] intra-chunk decay/score
+# tensors in bf16 (f32 einsum accumulation).  These 5-D tensors dominate
+# the SSM cells' memory term.
+SSD_BF16: bool = False

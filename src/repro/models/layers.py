@@ -1,0 +1,299 @@
+"""Shared neural layers: norms, RoPE, GQA attention (windows / softcap /
+prefix-LM / decode-cache), gated MLPs.  Pure functions over param pytrees;
+compute in bf16, accumulation and softmax in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.train.sharding import seq_axis, shard, shard_kv_cache
+
+COMPUTE_DTYPE = jnp.bfloat16
+_NEG = -1e30
+
+
+def cast(x):
+    return x.astype(COMPUTE_DTYPE)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """x [..., S, H, hd], positions [..., S] -> same shape."""
+    from repro.models import flags
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # [..., S, half]
+    cdt = COMPUTE_DTYPE if flags.ROPE_BF16 else jnp.float32
+    cos = jnp.cos(ang)[..., None, :].astype(cdt)                # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :].astype(cdt)
+    x1, x2 = jnp.split(x.astype(cdt), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def init_attn(key, cfg: ModelConfig, layers: int | None = None, dtype=jnp.float32):
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    L = () if layers is None else (layers,)
+    ks = jax.random.split(key, 4)
+    sc = D ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], L + (D, H, hd), dtype) * sc,
+        "wk": jax.random.normal(ks[1], L + (D, KV, hd), dtype) * sc,
+        "wv": jax.random.normal(ks[2], L + (D, KV, hd), dtype) * sc,
+        "wo": jax.random.normal(ks[3], L + (H, hd, D), dtype) * (H * hd) ** -0.5,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.zeros(L + (hd,), dtype)}
+        p["k_norm"] = {"scale": jnp.zeros(L + (hd,), dtype)}
+    return p
+
+
+def _attn_mask(q_pos, kv_pos, *, causal, window, prefix_len, kv_valid):
+    """[..., Sq, Skv] boolean mask.  window/prefix_len may be traced scalars."""
+    qp = q_pos[..., :, None]
+    kp = kv_pos[..., None, :]
+    if causal:
+        mask = kp <= qp
+    else:
+        mask = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if window is not None:
+        mask = jnp.logical_and(mask, qp - kp < window)
+    if prefix_len is not None:
+        bidir = jnp.logical_and(qp < prefix_len, kp < prefix_len)
+        mask = jnp.logical_or(mask, bidir)
+    if kv_valid is not None:
+        mask = jnp.logical_and(mask, kv_valid[..., None, :])
+    return mask
+
+
+def attention_core_blockwise(cfg: ModelConfig, q, k, v, q_pos, kv_pos, *,
+                             causal, window, prefix_len, block: int):
+    """Flash-style attention: online-softmax scan over KV blocks.
+
+    The [Sq, Skv] logit matrix never materializes — per-step working set is
+    [.., Sq, block].  Differentiable (scan-of-scan backward); masks are
+    rebuilt per block from positions.  This is the beyond-paper memory-term
+    optimization measured in EXPERIMENTS.md §Perf.
+    """
+    from repro.models import flags  # avoid cycle at import time
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if Skv % block:
+        pad = block - Skv % block
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-10**9)
+        Skv += pad
+    nb = Skv // block
+    qg = cast(q.reshape(B, Sq, KV, G, hd))
+    scale = hd ** -0.5
+
+    kb = jnp.moveaxis(k.reshape(B, nb, block, KV, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nb, block, KV, hd), 1, 0)
+    pb = jnp.moveaxis(kv_pos.reshape(-1, nb, block), 1, 0)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        k_j, v_j, p_j = xs
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, cast(k_j),
+                            preferred_element_type=jnp.float32) * scale
+        if cfg.attn_softcap:
+            c = cfg.attn_softcap
+            logits = c * jnp.tanh(logits / c)
+        mask = _attn_mask(q_pos, p_j, causal=causal, window=window,
+                          prefix_len=prefix_len, kv_valid=p_j >= 0)
+        # mask [B?,Sq,block] -> [B,1,1,Sq,block]
+        mask = mask[:, None, None] if mask.ndim == 3 else mask[None, None, None]
+        logits = jnp.where(mask, logits, _NEG)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(COMPUTE_DTYPE), cast(v_j),
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KV, G, Sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kb, vb, pb),
+        unroll=flags.scan_unroll(nb) if nb <= 64 else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]         # [B,KV,G,Sq,hd]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, hd)
+    return out.astype(COMPUTE_DTYPE)
+
+
+def attention_core(cfg: ModelConfig, q, k, v, mask):
+    """q [B,Sq,H,hd]; k,v [B,Skv,KV,hd]; mask [B?,Sq,Skv] -> [B,Sq,H,hd]."""
+    from repro.models import flags
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    if flags.ATTN_BF16_SOFTMAX:
+        # scale folded into Q: one op over [Sq,hd] instead of [Sq,Skv];
+        # the whole logits/softmax chain stays bf16 (row-max subtracted).
+        qg = cast(qg) * jnp.asarray(hd ** -0.5, COMPUTE_DTYPE)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", cast(qg), cast(k),
+                            preferred_element_type=COMPUTE_DTYPE)
+        if cfg.attn_softcap:
+            c = cfg.attn_softcap
+            logits = (c * jnp.tanh(logits / c)).astype(COMPUTE_DTYPE)
+        while mask.ndim < logits.ndim:
+            mask = mask[:, None]
+        neg = jnp.asarray(-3e38, COMPUTE_DTYPE)
+        logits = jnp.where(mask, logits, neg)
+        m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+        p = jnp.exp(logits - m)
+        w = p / jnp.sum(p, axis=-1, keepdims=True)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", w, cast(v),
+                         preferred_element_type=jnp.float32)
+        return out.reshape(B, Sq, H, hd).astype(COMPUTE_DTYPE)
+    logits = jnp.einsum(
+        "bqkgd,bskd->bkgqs", cast(qg), cast(k),
+        preferred_element_type=jnp.float32,
+    ) * (hd ** -0.5)
+    if cfg.attn_softcap:
+        c = cfg.attn_softcap
+        logits = c * jnp.tanh(logits / c)
+    while mask.ndim < logits.ndim:
+        mask = mask[:, None]
+    logits = jnp.where(mask, logits, _NEG)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bkgqs,bskd->bqkgd", cast(w), cast(v),
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, Sq, H, hd).astype(COMPUTE_DTYPE)
+
+
+def _project_qkv(cfg, p, x):
+    q = jnp.einsum("bsd,dhk->bshk", cast(x), cast(p["wq"]))
+    k = jnp.einsum("bsd,dhk->bshk", cast(x), cast(p["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", cast(x), cast(p["wv"]))
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"]["scale"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"]["scale"], cfg.norm_eps)
+    return q, k, v
+
+
+def self_attention(
+    cfg: ModelConfig,
+    p,
+    x,
+    positions,
+    *,
+    causal: bool = True,
+    window=None,
+    prefix_len=None,
+):
+    """Full-sequence self-attention (train / prefill)."""
+    from repro.models import flags
+    q, k, v = _project_qkv(cfg, p, x)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", None, "model", None)
+    k = shard(k, "batch", None, "model", None)
+    if flags.BLOCKWISE_ATTN and q.shape[1] > flags.BLOCKWISE_ATTN:
+        out = attention_core_blockwise(
+            cfg, q, k, v, positions, positions,
+            causal=causal, window=window, prefix_len=prefix_len,
+            block=flags.BLOCKWISE_ATTN)
+    else:
+        mask = _attn_mask(positions, positions, causal=causal, window=window,
+                          prefix_len=prefix_len, kv_valid=None)
+        out = attention_core(cfg, q, k, v, mask)
+    out = jnp.einsum("bshk,hkd->bsd", cast(out), cast(p["wo"]))
+    return shard(out, "batch", seq_axis(), None), (k, v)
+
+
+def self_attention_decode(cfg: ModelConfig, p, x, k_cache, v_cache, pos,
+                          *, window=None):
+    """Single-token decode vs a KV cache.
+
+    x [B,1,D]; k_cache/v_cache [B,Smax,KV,hd]; pos scalar i32 (current index).
+    Returns (out [B,1,D], new_k_cache, new_v_cache).
+    """
+    B, Smax = k_cache.shape[0], k_cache.shape[1]
+    q, k_new, v_new = _project_qkv(cfg, p, x)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q = rope(q, posv, cfg.rope_theta)
+    k_new = rope(k_new, posv, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
+    k_cache = shard_kv_cache(k_cache)
+    v_cache = shard_kv_cache(v_cache)
+    kv_pos = jnp.arange(Smax)[None, :]
+    mask = _attn_mask(posv, kv_pos, causal=True, window=window,
+                      prefix_len=None, kv_valid=kv_pos <= pos)
+    out = attention_core(cfg, q, k_cache, v_cache, mask)
+    out = jnp.einsum("bshk,hkd->bsd", cast(out), cast(p["wo"]))
+    return out, k_cache, v_cache
+
+
+def cross_attention(cfg: ModelConfig, p, x, k_enc, v_enc):
+    """Decoder cross-attention to precomputed encoder K/V (no positions)."""
+    q = jnp.einsum("bsd,dhk->bshk", cast(x), cast(p["wq"]))
+    Skv = k_enc.shape[1]
+    mask = jnp.ones((1, x.shape[1], Skv), bool)
+    out = attention_core(cfg, q, k_enc, v_enc, mask)
+    out = jnp.einsum("bshk,hkd->bsd", cast(out), cast(p["wo"]))
+    return out
+
+
+def encode_kv(cfg: ModelConfig, p, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", cast(enc_out), cast(p["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", cast(enc_out), cast(p["wv"]))
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None,
+             layers: int | None = None, dtype=jnp.float32):
+    D = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    L = () if layers is None else (layers,)
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": jax.random.normal(ks[0], L + (D, F), dtype) * D ** -0.5,
+        "w_down": jax.random.normal(ks[1], L + (F, D), dtype) * F ** -0.5,
+    }
+    if cfg.mlp in ("swiglu", "geglu"):
+        p["w_gate"] = jax.random.normal(ks[2], L + (D, F), dtype) * D ** -0.5
+    return p
+
+
+def mlp(cfg: ModelConfig, p, x):
+    up = jnp.einsum("bsd,df->bsf", cast(x), cast(p["w_up"]))
+    if cfg.mlp == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", cast(x), cast(p["w_gate"]))
+        h = jax.nn.silu(gate) * up
+    elif cfg.mlp == "geglu":
+        gate = jnp.einsum("bsd,df->bsf", cast(x), cast(p["w_gate"]))
+        h = jax.nn.gelu(gate, approximate=True) * up
+    elif cfg.mlp == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        raise ValueError(cfg.mlp)
+    h = shard(h, "batch", None, "model")
+    out = jnp.einsum("bsf,fd->bsd", h, cast(p["w_down"]))
+    return shard(out, "batch", seq_axis(), None)

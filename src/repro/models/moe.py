@@ -1,0 +1,193 @@
+"""Mixture-of-Experts FFN with capacity-based sorted dispatch.
+
+TPU-friendly formulation (no megablocks-style ragged kernels): token→expert
+assignments are ranked inside each expert by a stable argsort; tokens with
+rank ≥ capacity are dropped (capacity_factor 1.0 ⇒ exact average load,
+standard practice — drop fraction is returned as an aux metric).  Dispatch
+and combine are gathers/scatter-adds on an [E, C] slot table — O(T·k·D)
+memory, never the O(T·E·C) one-hot einsum.
+
+Sharding: experts across the "model"/"expert" axis (expert parallelism),
+tokens across the batch axes; GSPMD inserts the all-to-all-style collectives
+at the gather/scatter boundary.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import cast
+from repro.train.sharding import shard
+
+
+def init_moe(key, cfg: ModelConfig, layers: int | None = None,
+             dtype=jnp.float32):
+    D, E, Fe = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    L = () if layers is None else (layers,)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": jax.random.normal(ks[0], L + (D, E), dtype) * D ** -0.5,
+        "e_gate": jax.random.normal(ks[1], L + (E, D, Fe), dtype) * D ** -0.5,
+        "e_up": jax.random.normal(ks[2], L + (E, D, Fe), dtype) * D ** -0.5,
+        "e_down": jax.random.normal(ks[3], L + (E, Fe, D), dtype) * Fe ** -0.5,
+    }
+    if cfg.num_shared_experts:
+        Fs = Fe * cfg.num_shared_experts
+        ks2 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": jax.random.normal(ks2[0], L + (D, Fs), dtype) * D ** -0.5,
+            "w_up": jax.random.normal(ks2[1], L + (D, Fs), dtype) * D ** -0.5,
+            "w_down": jax.random.normal(ks2[2], L + (Fs, D), dtype) * Fs ** -0.5,
+        }
+    return p
+
+
+def _grouped_moe(cfg: ModelConfig, p, xt, top_p, top_e, factor: float, G: int):
+    """Grouped dispatch (§Perf): tokens are slotted *within* G data-shard
+    groups, so the dispatch gather/scatter is shard-local; only the expert
+    contraction spans the model axis and the combine is a single TP
+    all-reduce per layer (instead of masked cross-shard gathers).
+    Per-group capacity trades a little extra drop for locality."""
+    T, D = xt.shape
+    E, K = cfg.num_experts, cfg.top_k
+    Tg = T // G
+    capg = max(int(factor * Tg * K / E + 0.5), 1)
+
+    xg = xt.reshape(G, Tg, D)
+    xg = shard(xg, "batch", None, None)
+    eg = top_e.reshape(G, Tg * K)
+    pg = top_p.reshape(G, Tg * K)
+
+    order = jnp.argsort(eg, axis=1, stable=True)               # [G, Tg*K]
+    sorted_e = jnp.take_along_axis(eg, order, axis=1)
+    starts = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(E)))(sorted_e)  # [G,E]
+    rank = jnp.arange(Tg * K)[None, :] - jnp.take_along_axis(
+        starts, sorted_e, axis=1)
+    keep = rank < capg
+
+    e_idx = jnp.where(keep, sorted_e, E)
+    c_idx = jnp.where(keep, rank, 0).astype(jnp.int32)
+    tok_of = (order // K).astype(jnp.int32)                    # within-group
+    gate_of = jnp.take_along_axis(pg, order, axis=1)
+
+    def slot_one(e_i, c_i, t_o, g_o):
+        st = jnp.full((E, capg), Tg, jnp.int32).at[e_i, c_i].set(
+            t_o, mode="drop")
+        sg = jnp.zeros((E, capg), jnp.float32).at[e_i, c_i].set(
+            g_o, mode="drop")
+        return st, sg
+
+    slot_tok, slot_gate = jax.vmap(slot_one)(e_idx, c_idx, tok_of, gate_of)
+
+    # local (per-group) gather, then slice the expert dim across "model"
+    xe = jax.vmap(lambda xg_, st: jnp.take(
+        xg_, jnp.minimum(st, Tg - 1), axis=0))(xg, slot_tok)   # [G,E,capg,D]
+    valid = (slot_tok < Tg)[..., None]
+    xe = jnp.where(valid, xe, 0)
+    xe = shard(xe, "batch", "expert", None, None)
+
+    act = jax.nn.gelu if cfg.mlp == "geglu" else jax.nn.silu
+    gate = jnp.einsum("gecd,edf->gecf", cast(xe), cast(p["e_gate"]))
+    up = jnp.einsum("gecd,edf->gecf", cast(xe), cast(p["e_up"]))
+    ye = jnp.einsum("gecf,efd->gecd", act(gate) * up, cast(p["e_down"]))
+    ye = ye * slot_gate[..., None].astype(ye.dtype)
+
+    def combine_one(ye_g, st_g):
+        y = jnp.zeros((Tg + 1, D), ye_g.dtype)
+        return y.at[st_g.reshape(-1)].add(
+            ye_g.reshape(E * capg, D))[:Tg]
+
+    y = jax.vmap(combine_one)(ye, slot_tok)                    # [G,Tg,D]
+    return shard(y.reshape(T, D), "batch", None)
+
+
+def moe_ffn(cfg: ModelConfig, p, x, *, no_drop: bool = False,
+            capacity_override: float | None = None):
+    """x [B, S, D] -> [B, S, D].  Router in fp32, experts in bf16.
+
+    ``no_drop=True`` sets capacity = T (single-token decode: a handful of
+    tokens must never be dropped; the [E,T,D] buffer is tiny there).
+    ``capacity_override`` replaces cfg.capacity_factor (serving tuning).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum(
+        "td,de->te", xt.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                     # [T,K]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)     # renormalize
+
+    from repro.models import flags
+    G = flags.MOE_GROUPED_DISPATCH
+    if G < 0:
+        # auto: one group per batch shard of the active mesh (1 off-mesh)
+        from repro.train import sharding as _sh
+        mesh = _sh._current_mesh()
+        G = (_sh._axis_prod(mesh, _sh.physical_axes(mesh, "batch"))
+             if mesh is not None else 1)
+    if G > 1 and not no_drop and T % G == 0:
+        factor = capacity_override or cfg.capacity_factor
+        y = _grouped_moe(cfg, p, xt, top_p, top_e, factor, G)
+        if cfg.num_shared_experts:
+            sp = p["shared"]
+            act = jax.nn.gelu if cfg.mlp == "geglu" else jax.nn.silu
+            g_ = jnp.einsum("td,df->tf", cast(xt), cast(sp["w_gate"]))
+            u_ = jnp.einsum("td,df->tf", cast(xt), cast(sp["w_up"]))
+            y = y + jnp.einsum("tf,fd->td", act(g_) * u_, cast(sp["w_down"]))
+        from repro.train.sharding import seq_axis
+        return shard(y.reshape(B, S, D), "batch", seq_axis(), None)
+
+    # --- capacity-based slotting ------------------------------------------
+    if no_drop:
+        cap = T
+    else:
+        factor = capacity_override or cfg.capacity_factor
+        cap = max(int(factor * T * K / E + 0.5), 1)
+        cap = min(cap, T)
+    flat_e = top_e.reshape(-1)                                 # [T*K]
+    order = jnp.argsort(flat_e, stable=True)                   # sort by expert
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))         # [E]
+    rank = jnp.arange(T * K) - starts[sorted_e]                # within-expert
+    keep = rank < cap
+
+    slot_tok = jnp.full((E, cap), T, jnp.int32)                # T = "no token"
+    e_idx = jnp.where(keep, sorted_e, E)
+    c_idx = jnp.where(keep, rank, 0).astype(jnp.int32)
+    tok_of = (order // K).astype(jnp.int32)
+    slot_tok = slot_tok.at[e_idx, c_idx].set(tok_of, mode="drop")
+    slot_gate = jnp.zeros((E, cap), jnp.float32).at[e_idx, c_idx].set(
+        top_p.reshape(-1)[order], mode="drop")
+
+    # --- dispatch, expert FFN, combine ------------------------------------
+    xe = jnp.take(xt, jnp.minimum(slot_tok, T - 1), axis=0)    # [E,C,D]
+    valid = (slot_tok < T)[..., None]
+    xe = jnp.where(valid, xe, 0)
+    xe = shard(xe, "expert", None, None)
+
+    gate = jnp.einsum("ecd,edf->ecf", cast(xe), cast(p["e_gate"]))
+    up = jnp.einsum("ecd,edf->ecf", cast(xe), cast(p["e_up"]))
+    act = jax.nn.gelu if cfg.mlp == "geglu" else jax.nn.silu
+    h = act(gate) * up
+    ye = jnp.einsum("ecf,efd->ecd", h, cast(p["e_down"]))      # [E,C,D]
+    ye = ye * slot_gate[..., None].astype(ye.dtype)
+
+    y = jnp.zeros((T + 1, D), ye.dtype)
+    y = y.at[slot_tok.reshape(-1)].add(ye.reshape(E * cap, D))
+    y = y[:T]
+
+    if cfg.num_shared_experts:
+        sp = p["shared"]
+        gate = jnp.einsum("td,df->tf", cast(xt), cast(sp["w_gate"]))
+        up = jnp.einsum("td,df->tf", cast(xt), cast(sp["w_up"]))
+        y = y + jnp.einsum("tf,fd->td", act(gate) * up, cast(sp["w_down"]))
+
+    y = y.reshape(B, S, D)
+    from repro.train.sharding import seq_axis
+    return shard(y, "batch", seq_axis(), None)

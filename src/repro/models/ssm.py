@@ -1,0 +1,216 @@
+"""Mamba2 (state-space duality) sequence mixer.
+
+Implements the chunked SSD algorithm of the Mamba2 paper (arXiv:2405.21060):
+the sequence is split into chunks of Q tokens; within a chunk the recurrence
+is evaluated as a masked, decay-weighted attention-like contraction (MXU
+work), while cross-chunk information flows through a small per-chunk state
+recurrence ([B,H,P,N] carry, lax.scan).  Decode is the O(1) state update.
+
+Used standalone (mamba2-2.7b) and as the SSM path of Hymba's hybrid blocks
+(smaller state size).  n_groups = 1 (B/C shared across heads), as in the
+released 2.7b model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+
+from repro.models.config import ModelConfig
+from repro.models.layers import cast, rmsnorm
+from repro.train.sharding import shard
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    return di, N, H, P
+
+
+def init_ssm(key, cfg: ModelConfig, layers: int | None = None,
+             dtype=jnp.float32):
+    di, N, H, P = _dims(cfg)
+    D = cfg.d_model
+    conv_ch = di + 2 * N
+    zxbcdt = 2 * di + 2 * N + H
+    L = () if layers is None else (layers,)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": jax.random.normal(ks[0], L + (D, zxbcdt), dtype) * D ** -0.5,
+        "conv_w": jax.random.normal(ks[1], L + (cfg.ssm_conv, conv_ch), dtype)
+        * cfg.ssm_conv ** -0.5,
+        "conv_b": jnp.zeros(L + (conv_ch,), dtype),
+        "A_log": jnp.zeros(L + (H,), dtype),                 # A = -exp(A_log)
+        "ssm_D": jnp.ones(L + (H,), dtype),
+        "dt_bias": jnp.zeros(L + (H,), dtype),
+        "gate_norm": {"scale": jnp.zeros(L + (di,), dtype)},
+        "out_proj": jax.random.normal(ks[3], L + (di, D), dtype) * di ** -0.5,
+    }
+
+
+def _split_proj(cfg, p, x):
+    di, N, H, P = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dz->bsz", cast(x), cast(p["in_proj"]))
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1
+    )
+    return z, xs, Bc, Cc, dt
+
+
+def _causal_conv_full(p, u):
+    """Depthwise causal conv over [B,S,C] with width w."""
+    w = p["conv_w"]                                          # [w, C]
+    width = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        up[:, i : i + u.shape[1], :] * cast(w[i])[None, None, :]
+        for i in range(width)
+    )
+    return out + cast(p["conv_b"])[None, None, :]
+
+
+def ssd_full(cfg: ModelConfig, p, x):
+    """Full-sequence Mamba2 mixer.
+
+    x [B,S,D] -> (y [B,S,D], cache {'conv': [B,w-1,C], 'state': [B,H,P,N]})
+    where the cache is the decode-ready state after the last token.
+    """
+    di, N, H, P = _dims(cfg)
+    B_, S, D = x.shape
+    Q = min(cfg.ssm_chunk, S)
+
+    z, xs, Bc, Cc, dt = _split_proj(cfg, p, x)
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    tail = max(cfg.ssm_conv - 1, 0)
+    conv_tail = conv_in[:, S - tail:, :] if tail else conv_in[:, :0, :]
+    conv_out = jax.nn.silu(_causal_conv_full(p, conv_in))
+    xs, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    # Pad the sequence to a chunk multiple; padded steps get dt=0 (identity
+    # state transition, zero input) so the returned state is exact.
+    S_pad = -(-S // Q) * Q
+    if S_pad != S:
+        pad = ((0, 0), (0, S_pad - S), (0, 0))
+        xs = jnp.pad(xs, pad)
+        Bc = jnp.pad(Bc, pad)
+        Cc = jnp.pad(Cc, pad)
+        dt = jnp.pad(dt, pad)
+    nc = S_pad // Q
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # [H]
+
+    xh = xs.reshape(B_, nc, Q, H, P)
+    dtc = dt.reshape(B_, nc, Q, H)
+    Bch = Bc.reshape(B_, nc, Q, N).astype(jnp.float32)
+    Cch = Cc.reshape(B_, nc, Q, N).astype(jnp.float32)
+
+    dA = dtc * A[None, None, None, :]                        # [B,c,Q,H] (<=0)
+    cum = jnp.cumsum(dA, axis=2)                             # within-chunk
+
+    # ---- intra-chunk (attention-like, masked decay) ----
+    # The [B,c,Q,Q(,H)] tensors below dominate the SSM cells' memory term;
+    # flags.SSD_BF16 keeps the whole chain in bf16 (decay values are in
+    # [0,1]; products accumulate in f32 inside the einsum).
+    sdt = jnp.bfloat16 if flags.SSD_BF16 else jnp.float32
+    CB = jnp.einsum("bcqn,bctn->bcqt", Cch, Bch,
+                    preferred_element_type=jnp.float32).astype(sdt)
+    diff = (cum[:, :, :, None, :] - cum[:, :, None, :, :]).astype(sdt)
+    decay = jnp.exp(diff)                                    # [B,c,q,t,H]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    w_ = jnp.where(tri[None, None, :, :, None], decay, jnp.zeros((), sdt))
+    scores = CB[..., None] * w_ * dtc[:, :, None, :, :].astype(sdt)
+    y_intra = jnp.einsum(
+        "bcqth,bcthp->bcqhp", scores.astype(jnp.bfloat16), cast(xh),
+        preferred_element_type=jnp.float32,
+    )
+
+    # ---- chunk states + inter-chunk recurrence ----
+    last = cum[:, :, -1:, :]                                 # [B,c,1,H]
+    wS = jnp.exp(last - cum) * dtc                           # [B,c,Q,H]
+    S_c = jnp.einsum(
+        "bcth,bctn,bcthp->bchpn",
+        wS.astype(jnp.bfloat16), Bch.astype(jnp.bfloat16), cast(xh),
+        preferred_element_type=jnp.float32,
+    )                                                        # [B,c,H,P,N]
+    chunk_decay = jnp.exp(last[:, :, 0, :])                  # [B,c,H]
+
+    def scanf(h, inp):
+        s_c, dec = inp
+        h_out = h                                            # state entering chunk
+        h = h * dec[:, :, None, None] + s_c
+        return h, h_out
+
+    h0 = jnp.zeros((B_, H, P, N), jnp.float32)
+    h_final, h_prev = jax.lax.scan(
+        scanf,
+        h0,
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+        # cost-pass unroll capped: beyond 32 chunks the HLO would explode;
+        # the residual undercount is the tiny O(B*H*P*N) state update.
+        unroll=flags.scan_unroll(nc) if nc <= 32 else 1,
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                      # [B,c,H,P,N]
+
+    y_inter = jnp.einsum(
+        "bcqn,bcqh,bchpn->bcqhp",
+        Cch.astype(jnp.bfloat16),
+        jnp.exp(cum).astype(jnp.bfloat16),
+        h_prev.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+
+    y = (y_intra + y_inter + p["ssm_D"].astype(jnp.float32)[None, None, None, :, None]
+         * xh.astype(jnp.float32))
+    y = y.reshape(B_, S_pad, di)[:, :S, :]
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)),
+                p["gate_norm"]["scale"], cfg.norm_eps)
+    out = jnp.einsum("bsd,dk->bsk", cast(y), cast(p["out_proj"]))
+    cache = {"conv": conv_tail, "state": h_final}
+    return shard(out, "batch", None, None), cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, N, H, P = _dims(cfg)
+    conv_ch = di + 2 * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def ssd_decode(cfg: ModelConfig, p, x, cache):
+    """One-token state update.  x [B,1,D] -> (y [B,1,D], new cache)."""
+    di, N, H, P = _dims(cfg)
+    z, xs, Bc, Cc, dt = _split_proj(cfg, p, x)
+
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)         # [B,1,C]
+    hist = jnp.concatenate([cache["conv"], conv_in], axis=1)  # [B,w,C]
+    w = cast(p["conv_w"])                                    # [w,C]
+    conv_out = jnp.einsum("bwc,wc->bc", cast(hist), w) + cast(p["conv_b"])
+    conv_out = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = hist[:, 1:, :]
+    xs, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt[:, 0, :] * A[None, :])                   # [B,H]
+
+    xh = xs.reshape(-1, H, P).astype(jnp.float32)
+    Bv = Bc[:, 0, :].astype(jnp.float32)                     # [B,N]
+    Cv = Cc[:, 0, :].astype(jnp.float32)
+    dtv = dt[:, 0, :]                                        # [B,H]
+
+    state = cache["state"] * dA[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dtv, xh, Bv
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, Cv)
+    y = y + p["ssm_D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(-1, 1, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)),
+                p["gate_norm"]["scale"], cfg.norm_eps)
+    out = jnp.einsum("bsd,dk->bsk", cast(y), cast(p["out_proj"]))
+    return out, {"conv": new_conv, "state": state}

@@ -1,0 +1,407 @@
+"""Unified decoder stack for all assigned families.
+
+One scan-over-layers implementation covers dense / MoE / SSM / hybrid / VLM;
+the encoder-decoder (seamless) reuses the same blocks in ``encdec.py``.
+Layer heterogeneity (gemma2 local/global alternation, hymba's 3 global
+layers) is expressed as a per-layer *window vector* scanned alongside the
+stacked parameters, keeping the stack homogeneous for ``lax.scan`` (compile
+time stays O(1) in depth) and fully rematerialized (``jax.checkpoint``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.train.sharding import shard
+
+FULL_WINDOW = 1 << 30
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_layer_stack(key, cfg: ModelConfig, n_layers: int, *,
+                     cross: bool = False, causal_family: str | None = None,
+                     dtype=jnp.float32):
+    fam = causal_family or cfg.family
+    ks = iter(jax.random.split(key, 10))
+    D = cfg.d_model
+    p: dict = {"ln1": {"scale": jnp.zeros((n_layers, D), dtype)}}
+    if fam == "ssm":
+        p["ssm"] = ssm_mod.init_ssm(next(ks), cfg, layers=n_layers, dtype=dtype)
+        return p
+
+    p["attn"] = L.init_attn(next(ks), cfg, layers=n_layers, dtype=dtype)
+    p["ln2"] = {"scale": jnp.zeros((n_layers, D), dtype)}
+    if cfg.sandwich_norm:
+        p["post_attn_ln"] = {"scale": jnp.zeros((n_layers, D), dtype)}
+        p["post_mlp_ln"] = {"scale": jnp.zeros((n_layers, D), dtype)}
+    if fam == "hybrid":
+        p["ssm"] = ssm_mod.init_ssm(next(ks), cfg, layers=n_layers, dtype=dtype)
+    if cfg.moe and fam in ("moe",):
+        p["moe"] = moe_mod.init_moe(next(ks), cfg, layers=n_layers, dtype=dtype)
+    else:
+        p["mlp"] = L.init_mlp(next(ks), cfg, layers=n_layers, dtype=dtype)
+    if cross:
+        p["cross"] = L.init_attn(next(ks), cfg, layers=n_layers, dtype=dtype)
+        p["ln_cross"] = {"scale": jnp.zeros((n_layers, D), dtype)}
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    ks = iter(jax.random.split(key, 8))
+    D, V = cfg.d_model, cfg.vocab_size
+    p = {
+        "embedding": jax.random.normal(next(ks), (V, D), dtype) * D ** -0.5,
+        "layers": init_layer_stack(
+            next(ks), cfg, cfg.num_layers,
+            cross=cfg.cross_attention, dtype=dtype),
+        "final_norm": {"scale": jnp.zeros((D,), dtype)},
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(next(ks), (D, V), dtype) * D ** -0.5
+    if cfg.frontend:
+        p["frontend_proj"] = (
+            jax.random.normal(next(ks), (cfg.frontend_dim, D), dtype)
+            * cfg.frontend_dim ** -0.5)
+    if cfg.encoder_layers:
+        p["encoder"] = init_layer_stack(
+            next(ks), cfg, cfg.encoder_layers, causal_family="dense",
+            dtype=dtype)
+        p["encoder_norm"] = {"scale": jnp.zeros((D,), dtype)}
+    return p
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree (no allocation) — dry-run input."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Layer schedule
+# ---------------------------------------------------------------------------
+def window_schedule(cfg: ModelConfig, n_layers: int) -> jax.Array:
+    idx = jnp.arange(n_layers)
+    if cfg.layer_pattern == "local_global" and cfg.window:
+        # gemma2: even layers local (sliding window), odd layers global
+        return jnp.where(idx % 2 == 0, cfg.window, FULL_WINDOW)
+    if cfg.layer_pattern == "mostly_local" and cfg.window:
+        # hymba: first / middle / last layers global, rest sliding window
+        glob = (idx == 0) | (idx == n_layers // 2) | (idx == n_layers - 1)
+        return jnp.where(glob, FULL_WINDOW, cfg.window)
+    return jnp.full((n_layers,), FULL_WINDOW)
+
+
+# ---------------------------------------------------------------------------
+# Blocks (full sequence)
+# ---------------------------------------------------------------------------
+def block_full(cfg: ModelConfig, lp, x, positions, window, *,
+               causal=True, prefix_len=None, enc_out=None):
+    """One decoder layer over the full sequence.  Returns (x, cache_entry)."""
+    cache = {}
+    if cfg.family == "ssm":
+        h = L.rmsnorm(x, lp["ln1"]["scale"], cfg.norm_eps)
+        out, sstate = ssm_mod.ssd_full(cfg, lp["ssm"], h)
+        cache["ssm"] = sstate
+        return x + out, cache
+
+    h = L.rmsnorm(x, lp["ln1"]["scale"], cfg.norm_eps)
+    attn_out, (k, v) = L.self_attention(
+        cfg, lp["attn"], h, positions,
+        causal=causal, window=window, prefix_len=prefix_len)
+    cache["k"], cache["v"] = k, v
+    if cfg.family == "hybrid":
+        ssm_out, sstate = ssm_mod.ssd_full(cfg, lp["ssm"], h)
+        cache["ssm"] = sstate
+        attn_out = (attn_out + ssm_out) * 0.5      # hymba mean fusion
+    if cfg.sandwich_norm:
+        attn_out = L.rmsnorm(attn_out, lp["post_attn_ln"]["scale"], cfg.norm_eps)
+    x = x + attn_out
+
+    if enc_out is not None:
+        h = L.rmsnorm(x, lp["ln_cross"]["scale"], cfg.norm_eps)
+        k_enc, v_enc = L.encode_kv(cfg, lp["cross"], enc_out)
+        cache["cross_k"], cache["cross_v"] = k_enc, v_enc
+        x = x + L.cross_attention(cfg, lp["cross"], h, k_enc, v_enc)
+
+    h = L.rmsnorm(x, lp["ln2"]["scale"], cfg.norm_eps)
+    if cfg.moe and cfg.family == "moe":
+        mlp_out = moe_mod.moe_ffn(cfg, lp["moe"], h)
+    else:
+        mlp_out = L.mlp(cfg, lp["mlp"], h)
+    if cfg.sandwich_norm:
+        mlp_out = L.rmsnorm(mlp_out, lp["post_mlp_ln"]["scale"], cfg.norm_eps)
+    return x + mlp_out, cache
+
+
+def run_stack(cfg: ModelConfig, p_layers, x, positions, *, n_layers=None,
+              causal=True, prefix_len=None, enc_out=None,
+              collect_cache=False):
+    n_layers = n_layers or cfg.num_layers
+    windows = window_schedule(cfg, n_layers)
+
+    def layer(carry, xs):
+        lp, w_l = xs
+        out, cache = block_full(
+            cfg, lp, carry, positions, w_l,
+            causal=causal, prefix_len=prefix_len, enc_out=enc_out)
+        return out, (cache if collect_cache else None)
+
+    if flags.REMAT_POLICY == "dots":
+        layer = jax.checkpoint(
+            layer,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    else:
+        layer = jax.checkpoint(layer)
+    x, caches = jax.lax.scan(layer, x, (p_layers, windows),
+                             unroll=flags.scan_unroll(n_layers))
+    return x, caches
+
+
+# ---------------------------------------------------------------------------
+# Blocks (single-token decode vs cache)
+# ---------------------------------------------------------------------------
+def block_decode(cfg: ModelConfig, lp, x, cache, pos, window):
+    new_cache = {}
+    if cfg.family == "ssm":
+        h = L.rmsnorm(x, lp["ln1"]["scale"], cfg.norm_eps)
+        out, new_cache["ssm"] = ssm_mod.ssd_decode(cfg, lp["ssm"], h, cache["ssm"])
+        return x + out, new_cache
+
+    h = L.rmsnorm(x, lp["ln1"]["scale"], cfg.norm_eps)
+    attn_out, k_c, v_c = L.self_attention_decode(
+        cfg, lp["attn"], h, cache["k"], cache["v"], pos, window=window)
+    new_cache["k"], new_cache["v"] = k_c, v_c
+    if cfg.family == "hybrid":
+        ssm_out, new_cache["ssm"] = ssm_mod.ssd_decode(
+            cfg, lp["ssm"], h, cache["ssm"])
+        attn_out = (attn_out + ssm_out) * 0.5
+    if cfg.sandwich_norm:
+        attn_out = L.rmsnorm(attn_out, lp["post_attn_ln"]["scale"], cfg.norm_eps)
+    x = x + attn_out
+
+    if "cross_k" in cache:
+        h = L.rmsnorm(x, lp["ln_cross"]["scale"], cfg.norm_eps)
+        x = x + L.cross_attention(
+            cfg, lp["cross"], h, cache["cross_k"], cache["cross_v"])
+        new_cache["cross_k"] = cache["cross_k"]
+        new_cache["cross_v"] = cache["cross_v"]
+
+    h = L.rmsnorm(x, lp["ln2"]["scale"], cfg.norm_eps)
+    if cfg.moe and cfg.family == "moe":
+        mlp_out = moe_mod.moe_ffn(
+            cfg, lp["moe"], h,
+            no_drop=flags.SERVE_MOE_CAP is None,
+            capacity_override=flags.SERVE_MOE_CAP)
+    else:
+        mlp_out = L.mlp(cfg, lp["mlp"], h)
+    if cfg.sandwich_norm:
+        mlp_out = L.rmsnorm(mlp_out, lp["post_mlp_ln"]["scale"], cfg.norm_eps)
+    return x + mlp_out, new_cache
+
+
+def run_stack_decode(cfg: ModelConfig, p_layers, x, caches, pos, *,
+                     n_layers=None):
+    n_layers = n_layers or cfg.num_layers
+    windows = window_schedule(cfg, n_layers)
+
+    if flags.DECODE_CACHE_CARRY:
+        # Cache as aliased scan *carry*: per-layer slices are read and
+        # written in place inside the while-loop state, so the full cache
+        # never round-trips the loop boundary (§Perf, decode cells).
+        def layer(carry, xs):
+            x, caches = carry
+            lp, w_l, idx = xs
+            cache_l = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0, False),
+                caches)
+            out, new_cache = block_decode(cfg, lp, x, cache_l, pos, w_l)
+            caches = jax.tree.map(
+                lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                    a, u.astype(a.dtype), idx, 0),
+                caches, new_cache)
+            return (out, caches), None
+
+        (x, new_caches), _ = jax.lax.scan(
+            layer, (x, caches),
+            (p_layers, windows, jnp.arange(n_layers)),
+            unroll=flags.scan_unroll(n_layers))
+        return x, new_caches
+
+    def layer(carry, xs):
+        lp, w_l, cache_l = xs
+        out, new_cache = block_decode(cfg, lp, carry, cache_l, pos, w_l)
+        return out, new_cache
+
+    x, new_caches = jax.lax.scan(layer, x, (p_layers, windows, caches),
+                                 unroll=flags.scan_unroll(n_layers))
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def embed(cfg: ModelConfig, p, tokens):
+    e = jnp.take(p["embedding"], tokens, axis=0)
+    if cfg.scale_embedding:
+        e = e * jnp.sqrt(jnp.float32(cfg.d_model)).astype(e.dtype)
+    from repro.train.sharding import seq_axis
+    return shard(L.cast(e), "batch", seq_axis(), None)
+
+
+def unembed(cfg: ModelConfig, p, h):
+    h = L.rmsnorm(h, p["final_norm"]["scale"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", L.cast(h), L.cast(p["embedding"]),
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", L.cast(h), L.cast(p["lm_head"]),
+                            preferred_element_type=jnp.float32)
+    if cfg.final_softcap:
+        c = cfg.final_softcap
+        logits = c * jnp.tanh(logits / c)
+    return shard(logits, "batch", None, "model")
+
+
+def _prefix_inputs(cfg: ModelConfig, p, tokens, frontend):
+    """VLM: project stub patch embeddings and prepend to token embeddings."""
+    x_txt = embed(cfg, p, tokens)
+    if frontend is None:
+        return x_txt, None
+    proj = jnp.einsum("bpr,rd->bpd", L.cast(frontend),
+                      L.cast(p["frontend_proj"]))
+    x = jnp.concatenate([proj, x_txt], axis=1)
+    return shard(x, "batch", None, None), cfg.frontend_len
+
+
+# ---------------------------------------------------------------------------
+# Public model functions (decoder-only families)
+# ---------------------------------------------------------------------------
+def forward(cfg: ModelConfig, p, tokens, *, frontend=None,
+            collect_cache=False):
+    """Full-sequence forward.  tokens [B,St]; frontend [B,Lf,raw] for VLM.
+
+    Returns (logits [B,S,V], caches or None).  For VLM, S = Lf + St.
+    """
+    x, prefix_len = _prefix_inputs(cfg, p, tokens, frontend)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x, caches = run_stack(
+        cfg, p["layers"], x, positions,
+        prefix_len=prefix_len, collect_cache=collect_cache)
+    return unembed(cfg, p, x), caches
+
+
+def _nll(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return jnp.sum(jnp.where(valid, nll, 0.0)), jnp.sum(valid)
+
+
+def loss_fn(cfg: ModelConfig, p, batch):
+    """Next-token cross-entropy; labels == -1 are masked (e.g. image prefix)."""
+    labels = batch["labels"]
+    if cfg.frontend and batch.get("frontend") is not None:
+        pad = jnp.full((labels.shape[0], cfg.frontend_len), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+
+    if flags.CHUNKED_LOSS:
+        # never materialize the [B,S,V] fp32 logits: produce them per
+        # sequence chunk, rematerialized in backward (§Perf optimization)
+        x, prefix_len = _prefix_inputs(cfg, p, batch["tokens"],
+                                       batch.get("frontend"))
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        h, _ = run_stack(cfg, p["layers"], x, positions,
+                         prefix_len=prefix_len)
+        c = flags.CHUNKED_LOSS
+        pad_s = (-S) % c
+        if pad_s:
+            h = jnp.pad(h, ((0, 0), (0, pad_s), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad_s)),
+                             constant_values=-1)
+        nb = (S + pad_s) // c
+        hb = jnp.moveaxis(h.reshape(B, nb, c, -1), 1, 0)
+        lb = jnp.moveaxis(labels.reshape(B, nb, c), 1, 0)
+
+        @jax.checkpoint
+        def chunk(h_c, l_c):
+            return _nll(unembed(cfg, p, h_c), l_c)
+
+        def body(carry, xs):
+            s, n = chunk(*xs)
+            return (carry[0] + s, carry[1] + n), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), jnp.int32(0)), (hb, lb),
+            unroll=flags.scan_unroll(nb) if nb <= 64 else 1)
+        return tot / jnp.maximum(cnt, 1)
+
+    logits, _ = forward(cfg, p, batch["tokens"],
+                        frontend=batch.get("frontend"))
+    tot, cnt = _nll(logits, labels)
+    return tot / jnp.maximum(cnt, 1)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
+               enc_len: int | None = None, dtype=jnp.bfloat16):
+    """Stacked-by-layer decode cache (ShapeDtype-compatible for dry-runs)."""
+    Lc, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    cache: dict = {}
+    if cfg.family != "ssm":
+        cache["k"] = jnp.zeros((Lc, batch, max_seq, KV, hd), dtype)
+        cache["v"] = jnp.zeros((Lc, batch, max_seq, KV, hd), dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        one = ssm_mod.init_ssm_cache(cfg, batch, dtype=jnp.float32)
+        cache["ssm"] = jax.tree.map(
+            lambda a: jnp.zeros((Lc,) + a.shape, a.dtype), one)
+    if cfg.cross_attention and enc_len:
+        cache["cross_k"] = jnp.zeros((Lc, batch, enc_len, KV, hd), dtype)
+        cache["cross_v"] = jnp.zeros((Lc, batch, enc_len, KV, hd), dtype)
+    return cache
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int, **kw):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, max_seq, **kw))
+
+
+def decode_step(cfg: ModelConfig, p, cache, token, pos):
+    """One serving step: token [B,1] i32, pos scalar i32.
+
+    Returns (logits [B,V] f32, new cache)."""
+    x = embed(cfg, p, token)
+    x, new_cache = run_stack_decode(cfg, p["layers"], x, cache, pos)
+    logits = unembed(cfg, p, x)[:, 0, :]
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, p, tokens, max_seq: int, *, frontend=None):
+    """Process the prompt, build the decode cache padded to max_seq.
+
+    Returns (last-position logits [B,V], cache)."""
+    logits, caches = forward(cfg, p, tokens, frontend=frontend,
+                             collect_cache=True)
+    B = tokens.shape[0]
+    cache = init_cache(cfg, B, max_seq)
+    if "k" in cache:
+        kpre = caches["k"].astype(cache["k"].dtype)  # [L,B,S,KV,hd]
+        vpre = caches["v"].astype(cache["v"].dtype)
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], kpre, (0, 0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], vpre, (0, 0, 0, 0, 0))
+    if "ssm" in cache:
+        cache["ssm"] = jax.tree.map(
+            lambda z, c: c.astype(z.dtype), cache["ssm"], caches["ssm"])
+    return logits[:, -1, :], cache

@@ -1,0 +1,90 @@
+"""AdamW + LR schedules (self-contained; optax is not available offline).
+
+State layout mirrors params (pytree of (mu, nu)); moments are stored in the
+same sharding as the parameters, so under FSDP the optimizer state is
+ZeRO-3-sharded for free.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.float32(lr)
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.0) -> Schedule:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def adamw(
+    lr: Schedule | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float | None = 1.0,
+) -> Optimizer:
+    sched = constant(lr) if isinstance(lr, (int, float)) else lr
+
+    def init(params) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(
+            step=jnp.int32(0),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update(grads, state: AdamWState, params):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if grad_clip is not None:
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(g * g) for g in jax.tree.leaves(grads))
+            )
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        b1t = 1.0 - b1 ** step.astype(jnp.float32)
+        b2t = 1.0 - b2 ** step.astype(jnp.float32)
+        lr_t = sched(step)
+
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+
+        def upd(p, m, v):
+            mhat = m / b1t
+            vhat = v / b2t
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+                jnp.float32
+            )
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)

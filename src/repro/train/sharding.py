@@ -1,0 +1,189 @@
+"""Logical-axis sharding rules (MaxText-style, minimal).
+
+Model code annotates activations with *logical* axes via ``shard(x, ...)``;
+parameters get PartitionSpecs from name-based rules.  The mapping to physical
+mesh axes adapts to whichever mesh is active:
+
+  single-pod mesh  (data=16, model=16):  fsdp=('data',)           batch=('data',)
+  multi-pod  mesh  (pod=2, data=16, model=16): fsdp=('pod','data') batch=('pod','data')
+
+Outside a mesh context (CPU smoke tests) everything is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+def _current_mesh() -> Mesh | None:
+    return getattr(_ctx, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None):
+    prev = _current_mesh()
+    _ctx.mesh = mesh
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _ctx.mesh = prev
+
+
+def physical_axes(mesh: Mesh, logical: str):
+    """logical axis name -> physical mesh axes (tuple) or None."""
+    names = mesh.axis_names
+    batchish = tuple(a for a in ("pod", "data") if a in names)
+    table = {
+        "batch": batchish,
+        "fsdp": batchish,
+        "seq": batchish,          # sequence sharding reuses the data axes
+        "seqtp": ("model",) if "model" in names else (),  # sequence parallel
+        "model": ("model",) if "model" in names else (),
+        "expert": ("model",) if "model" in names else (),
+        None: (),
+    }
+    axes = table.get(logical, ())
+    return axes if axes else None
+
+
+def _axis_prod(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    n = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= sizes[a]
+    return n
+
+
+def spec(mesh: Mesh, *logical, shape: tuple | None = None) -> P:
+    """PartitionSpec for logical axes; with ``shape`` given, any dim not
+    divisible by its mesh-axis product falls back to replicated (e.g. 5 KV
+    heads on a 16-way model axis, or a vocab not divisible by 16)."""
+    phys = [physical_axes(mesh, a) for a in logical]
+    if shape is not None:
+        phys = [
+            p if p is None or s % _axis_prod(mesh, p) == 0 else None
+            for p, s in zip(phys, shape)
+        ]
+    return P(*phys)
+
+
+def shard(x, *logical):
+    """Annotate an activation with logical axes (no-op without a mesh)."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec(mesh, *logical, shape=x.shape))
+    )
+
+
+def seq_axis():
+    """Logical axis for the sequence dim of the residual stream: 'seqtp'
+    under sequence parallelism (flags.SEQ_PARALLEL), replicated otherwise."""
+    from repro.models import flags
+    return "seqtp" if flags.SEQ_PARALLEL else None
+
+
+def kv_cache_logical(mesh: Mesh, shape: tuple) -> tuple:
+    """Logical axes for a KV cache [..., B, S, KV, hd] (optionally with a
+    leading layer dim).  Batch over the data axes when divisible, else
+    sequence over them.  The model axis goes to KV heads when they divide
+    it; otherwise (GQA with few KV heads) it shards the *sequence* dim —
+    flash-decoding-style partial softmax, collectives inserted by GSPMD —
+    instead of replicating the cache TP-ways (see EXPERIMENTS.md §Perf)."""
+    from repro.models import flags
+    B, S, KV = shape[-4], shape[-3], shape[-2]
+    nb = _axis_prod(mesh, physical_axes(mesh, "batch"))
+    nm = _axis_prod(mesh, physical_axes(mesh, "model"))
+    lead = (None,) * (len(shape) - 4)
+    batch_ax, seq_ax = ("batch", None) if B % nb == 0 else (None, "seq")
+    if KV % nm == 0:
+        return lead + (batch_ax, seq_ax, "model", None)
+    if flags.KV_SHARD_SEQ and S % nm == 0 and seq_ax is None:
+        return lead + (batch_ax, "seqtp", None, None)
+    return lead + (batch_ax, seq_ax, None, None)
+
+
+def shard_kv_cache(x):
+    """Apply the KV-cache rule to a [B, S, KV, hd] activation."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    logical = kv_cache_logical(mesh, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec(mesh, *logical, shape=x.shape))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules: leaf-name based.  Shapes listed trailing-aligned; a
+# leading layer-stack dim gets None automatically.
+# ---------------------------------------------------------------------------
+_PARAM_RULES: dict[str, tuple] = {
+    # embeddings / heads
+    "embedding": ("model", "fsdp"),          # [V, D]
+    "lm_head": ("fsdp", "model"),            # [D, V]
+    "frontend_proj": (None, "fsdp"),         # [raw, D]
+    # attention
+    "wq": ("fsdp", "model", None),           # [D, H, hd]
+    "wk": ("fsdp", "model", None),           # [D, KV, hd]
+    "wv": ("fsdp", "model", None),
+    "wo": ("model", None, "fsdp"),           # [H, hd, D]
+    "q_norm": (None,),
+    "k_norm": (None,),
+    # dense mlp
+    "w_gate": ("fsdp", "model"),             # [D, F]
+    "w_up": ("fsdp", "model"),
+    "w_down": ("model", "fsdp"),             # [F, D]
+    # moe
+    "router": ("fsdp", None),                # [D, E]
+    "e_gate": ("expert", "fsdp", None),      # [E, D, Fe]
+    "e_up": ("expert", "fsdp", None),
+    "e_down": ("expert", None, "fsdp"),      # [E, Fe, D]
+    # ssm
+    "in_proj": ("fsdp", "model"),            # [D, zxbcdt]
+    "out_proj": ("model", "fsdp"),           # [d_inner, D]
+    "conv_w": (None, "model"),               # [width, channels]
+    "conv_b": ("model",),
+    "A_log": ("model",),                     # [H]
+    "ssm_D": ("model",),
+    "dt_bias": ("model",),
+    # norms
+    "scale": (None,),
+}
+
+
+def param_pspec(path: tuple, shape: tuple) -> tuple:
+    """Logical spec for a parameter leaf, derived from its key path."""
+    name = None
+    for part in reversed(path):
+        key = getattr(part, "key", None) or getattr(part, "name", str(part))
+        if key in _PARAM_RULES:
+            name = key
+            break
+    if name is None:
+        return (None,) * len(shape)
+    logical = _PARAM_RULES[name]
+    pad = len(shape) - len(logical)
+    return (None,) * pad + tuple(logical)
+
+
+def param_shardings(mesh: Mesh, params_shape):
+    """pytree of NamedSharding matching a params (shape) pytree."""
+
+    def leaf(path, x):
+        logical = param_pspec(path, x.shape)
+        return NamedSharding(mesh, spec(mesh, *logical, shape=x.shape))
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)

@@ -1,0 +1,68 @@
+"""Train / serve step factories for the LM zoo.
+
+``make_train_step``: loss -> grad -> AdamW, bf16 compute / fp32 state,
+full remat via the scanned stack.  ``make_serve_step``: one decode token
+against the KV/SSM cache.  Both are pure functions of (state, batch) so they
+lower AOT with explicit shardings in the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import model_fns
+from repro.train.optimizer import Optimizer
+
+
+def make_train_step(cfg, opt: Optimizer):
+    mod = model_fns(cfg)
+
+    def train_step(params, opt_state, batch):
+        from repro.models import flags
+        if flags.BF16_GRADS:
+            # differentiate against a bf16 weight copy: gradient
+            # reduce-scatters move half the bytes; fp32 master update.
+            def loss_of(p16):
+                return mod.loss_fn(cfg, p16, batch)
+
+            p16 = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if p.dtype == jnp.float32 and p.ndim > 1 else p, params)
+            loss, grads = jax.value_and_grad(loss_of)(p16)
+        else:
+            loss, grads = jax.value_and_grad(
+                lambda p: mod.loss_fn(cfg, p, batch)
+            )(params)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg):
+    mod = model_fns(cfg)
+
+    def serve_step(params, cache, token, pos):
+        logits, new_cache = mod.decode_step(cfg, params, cache, token, pos)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, new_cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg, max_seq: int):
+    mod = model_fns(cfg)
+
+    if cfg.family == "encdec":
+        def prefill_step(params, tokens, frontend):
+            return mod.prefill(cfg, params, tokens, frontend, max_seq)
+    elif cfg.family == "vlm":
+        def prefill_step(params, tokens, frontend):
+            return mod.prefill(cfg, params, tokens, max_seq,
+                               frontend=frontend)
+    else:
+        def prefill_step(params, tokens):
+            return mod.prefill(cfg, params, tokens, max_seq)
+
+    return prefill_step

@@ -1,0 +1,10 @@
+import os
+
+# Keep the default single-device CPU view for tests (the dry-run sets its own
+# 512-device flag in its own process; per the launch spec it must NOT leak
+# here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

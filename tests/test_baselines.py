@@ -1,0 +1,60 @@
+"""Competitor algorithms: sanity + the paper's qualitative ordering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import big_means, full_objective
+from repro.core.baselines import (
+    da_mssc, forgy_kmeans, kmeans_parallel, lightweight_coreset_kmeans,
+    multistart_kmeans, ward,
+)
+from repro.data.synthetic import GMMSpec, gmm_dataset
+
+X = gmm_dataset(GMMSpec(m=5000, n=10, components=6, seed=21))
+KEY = jax.random.PRNGKey(0)
+
+
+def _fpp(centroids):
+    return float(full_objective(X, centroids)) / X.shape[0]
+
+
+@pytest.mark.parametrize("fn,kwargs", [
+    (forgy_kmeans, {}),
+    (multistart_kmeans, {"n_init": 2}),
+    (kmeans_parallel, {"rounds": 3}),
+    (lightweight_coreset_kmeans, {"s": 800}),
+    (da_mssc, {"s": 800, "q": 4}),
+])
+def test_baseline_runs_and_is_sane(fn, kwargs):
+    res = fn(X, KEY, k=6, **kwargs)
+    assert res.centroids.shape == (6, 10)
+    assert np.isfinite(float(res.objective))
+    # against a trivial 1-cluster solution
+    trivial = float(full_objective(X, jnp.mean(X, 0, keepdims=True)))
+    assert _fpp(res.centroids) * X.shape[0] < trivial
+
+
+def test_ward_small_data():
+    c, labels = ward(np.asarray(X[:800]), 6)
+    assert c.shape == (6, 10)
+    assert len(np.unique(labels)) == 6
+    # ward should beat the trivial solution comfortably
+    f_w = float(full_objective(X[:800], jnp.asarray(c))) / 800
+    f_triv = float(full_objective(X[:800], jnp.mean(X[:800], 0,
+                                                    keepdims=True))) / 800
+    assert f_w < 0.5 * f_triv
+
+
+def test_ward_refuses_big_data():
+    with pytest.raises(MemoryError):
+        ward(np.zeros((30000, 2)), 3)
+
+
+def test_quality_ordering_bigmeans_vs_informed_inits():
+    """The paper's headline: Big-means matches the strong baselines while
+    only ever touching small chunks."""
+    st, _ = big_means(X, KEY, k=6, s=800, n_chunks=25)
+    f_bm = _fpp(st.centroids)
+    f_pp = _fpp(multistart_kmeans(X, KEY, k=6, n_init=3).centroids)
+    assert f_bm <= f_pp * 1.10

@@ -1,0 +1,109 @@
+"""Behavioural tests for the paper core: Lloyd, K-means++, Big-means."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    big_means, chunk_step, full_objective, init_state, kmeanspp, lloyd,
+    sample_chunk, seed,
+)
+from repro.data.synthetic import GMMSpec, gmm_dataset
+
+X = gmm_dataset(GMMSpec(m=6000, n=8, components=5, seed=11))
+
+
+def test_lloyd_monotone_objective():
+    c0 = kmeanspp(X, jax.random.PRNGKey(0), 5)
+    f_init = float(full_objective(X, c0))
+    res = lloyd(X, c0)
+    assert float(res.objective) <= f_init + 1e-3
+    assert int(res.iterations) >= 1
+    # objective equals independent evaluation of the final centroids
+    np.testing.assert_allclose(
+        float(res.objective), float(full_objective(X, res.centroids)),
+        rtol=1e-5)
+
+
+def test_lloyd_counts_and_assignments():
+    c0 = kmeanspp(X, jax.random.PRNGKey(1), 5)
+    res = lloyd(X, c0)
+    assert res.assignments.shape == (X.shape[0],)
+    assert int(res.assignments.min()) >= 0
+    assert int(res.assignments.max()) < 5
+    assert float(jnp.sum(res.counts)) == X.shape[0]
+    np.testing.assert_array_equal(
+        np.asarray(res.degenerate), np.asarray(res.counts) == 0)
+
+
+def test_lloyd_respects_max_iters():
+    c0 = kmeanspp(X, jax.random.PRNGKey(2), 5)
+    res = lloyd(X, c0, max_iters=3, tol=0.0)
+    assert int(res.iterations) <= 3
+
+
+def test_kmeanspp_seeds_are_data_points():
+    c = kmeanspp(X, jax.random.PRNGKey(3), 7, candidates=1)
+    d = np.asarray(
+        jnp.min(jnp.sum((X[None] - c[:, None]) ** 2, -1), axis=1))
+    assert d.max() < 1e-6      # every seed coincides with a dataset point
+
+
+def test_kmeanspp_deterministic():
+    a = kmeanspp(X, jax.random.PRNGKey(4), 5)
+    b = kmeanspp(X, jax.random.PRNGKey(4), 5)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_seed_keeps_nondegenerate_rows():
+    init = jnp.stack([X[0], X[1], jnp.zeros(8), X[3]])
+    degenerate = jnp.array([False, False, True, False])
+    out = seed(X, jax.random.PRNGKey(5), 4, init=init, degenerate=degenerate)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(init[0]))
+    np.testing.assert_array_equal(np.asarray(out[3]), np.asarray(init[3]))
+    assert not np.allclose(np.asarray(out[2]), 0.0)   # reseeded
+
+
+def test_chunk_step_keep_the_best():
+    state = init_state(5, 8)
+    key = jax.random.PRNGKey(6)
+    fs = []
+    for i in range(8):
+        k1, k2, key = jax.random.split(key, 3)
+        chunk = sample_chunk(X, k1, 512)
+        state, info = chunk_step(chunk, state, k2)
+        fs.append(float(state.f_best))
+    assert all(b <= a + 1e-6 for a, b in zip(fs, fs[1:]))   # monotone
+    assert int(state.n_accepted) >= 1
+    assert np.isfinite(fs[-1])
+
+
+def test_big_means_close_to_full_kmeans():
+    key = jax.random.PRNGKey(7)
+    state, infos = big_means(X, key, k=5, s=600, n_chunks=25)
+    f_bm = float(full_objective(X, state.centroids)) / X.shape[0]
+    c0 = kmeanspp(X, jax.random.PRNGKey(8), 5)
+    f_full = float(lloyd(X, c0).objective) / X.shape[0]
+    # decomposition search should be within 10% of full-data K-means
+    assert f_bm <= f_full * 1.10
+    assert infos.f_new.shape == (25,)
+
+
+def test_big_means_order_independence():
+    """Property 8 (§2.2): results do not depend on dataset row order in
+    distribution — a row permutation with the same key gives a solution of
+    statistically equal quality (identical sampling law)."""
+    key = jax.random.PRNGKey(9)
+    perm = jax.random.permutation(jax.random.PRNGKey(10), X.shape[0])
+    s1, _ = big_means(X, key, k=5, s=600, n_chunks=20)
+    s2, _ = big_means(X[perm], key, k=5, s=600, n_chunks=20)
+    f1 = float(full_objective(X, s1.centroids)) / X.shape[0]
+    f2 = float(full_objective(X, s2.centroids)) / X.shape[0]
+    assert abs(f1 - f2) / f1 < 0.1
+
+
+def test_sample_chunk_without_replacement_unique():
+    idx_free = sample_chunk(jnp.arange(1000.0)[:, None],
+                            jax.random.PRNGKey(11), 64,
+                            with_replacement=False)
+    vals = np.asarray(idx_free).ravel()
+    assert len(np.unique(vals)) == 64

@@ -1,0 +1,59 @@
+"""Serving correctness: prefill + single-token decode must reproduce the
+full-sequence forward logits (exactly for attention families; small bf16
+tolerance for SSD whose chunked/recurrent forms differ in summation order)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import transformer as T
+from repro.models.registry import get_config, model_fns
+
+B, S, S0 = 2, 32, 24
+KEY = jax.random.PRNGKey(1)
+
+CASES = [
+    ("llama3.2-1b", 1e-3),
+    ("gemma2-2b", 1e-3),
+    ("phi3-mini-3.8b", 1e-3),
+    ("paligemma-3b", 1e-3),
+    ("seamless-m4t-medium", 1e-3),
+    ("deepseek-moe-16b", 1e-3),
+    ("hymba-1.5b", 0.15),
+    ("mamba2-2.7b", 0.15),
+]
+
+
+@pytest.mark.parametrize("arch,tol", CASES)
+def test_decode_matches_forward(arch, tol):
+    cfg = get_config(arch).reduced()
+    if cfg.moe:
+        # align train/decode capacity handling: no token drops in either
+        cfg = dataclasses.replace(
+            cfg, capacity_factor=cfg.num_experts / cfg.top_k)
+    mod = model_fns(cfg)
+    params = T.init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+
+    if cfg.family == "encdec":
+        frames = jax.random.normal(KEY, (B, 16, cfg.frontend_dim))
+        logits_full, _ = mod.forward(cfg, params, tokens, frames)
+        _, cache = mod.prefill(cfg, params, tokens[:, :S0], frames, S)
+        offset = 0
+    elif cfg.family == "vlm":
+        frames = jax.random.normal(KEY, (B, cfg.frontend_len, cfg.frontend_dim))
+        logits_full, _ = mod.forward(cfg, params, tokens, frontend=frames)
+        _, cache = mod.prefill(cfg, params, tokens[:, :S0],
+                               S + cfg.frontend_len, frontend=frames)
+        offset = cfg.frontend_len
+    else:
+        logits_full, _ = mod.forward(cfg, params, tokens)
+        _, cache = mod.prefill(cfg, params, tokens[:, :S0], S)
+        offset = 0
+
+    for t in range(S0, S):
+        lg, cache = mod.decode_step(cfg, params, cache, tokens[:, t:t + 1],
+                                    jnp.int32(t + offset))
+        err = float(jnp.max(jnp.abs(lg - logits_full[:, t + offset])))
+        assert err < tol, (t, err)

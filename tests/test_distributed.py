@@ -1,0 +1,65 @@
+"""Multi-device behaviour (8 forced host devices, separate process so the
+main test process keeps its single-device view, per the launch spec)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.core import big_means, big_means_sharded, full_objective
+from repro.data.synthetic import GMMSpec, gmm_dataset
+
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+X = gmm_dataset(GMMSpec(m=16000, n=8, components=5, seed=2))
+key = jax.random.PRNGKey(0)
+
+out = {}
+st, infos = big_means_sharded(
+    X, key, mesh=mesh, k=5, s=800, chunks_per_worker=6, sync_every=2,
+    axes=("data",))
+out["f_sharded"] = float(full_objective(X, st.centroids)) / X.shape[0]
+out["accepted"] = int(st.n_accepted)
+out["n_infos"] = int(infos.f_new.shape[0])
+
+# all-workers variant: every device is a worker
+st2, _ = big_means_sharded(
+    X, key, mesh=mesh, k=5, s=800, chunks_per_worker=4, sync_every=4,
+    axes=("data", "model"))
+out["f_allworkers"] = float(full_objective(X, st2.centroids)) / X.shape[0]
+
+# sequential reference
+st3, _ = big_means(X, key, k=5, s=800, n_chunks=24)
+out["f_seq"] = float(full_objective(X, st3.centroids)) / X.shape[0]
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def result():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_sharded_quality_matches_sequential(result):
+    assert result["f_sharded"] <= result["f_seq"] * 1.15
+    assert result["f_allworkers"] <= result["f_seq"] * 1.15
+
+
+def test_sharded_progress(result):
+    assert result["accepted"] >= 1
+    # per-worker chunk traces concatenated over the 4 data-axis workers
+    assert result["n_infos"] == 4 * 6

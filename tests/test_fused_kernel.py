@@ -1,0 +1,85 @@
+"""Fused Lloyd-step kernel vs the two-pass oracle (shape/dtype sweep)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.fused_step import fits, fused_step_pallas
+
+SHAPES = [
+    (100, 7, 3),
+    (300, 28, 25),       # HEPMASS-like paper regime
+    (512, 768, 25),      # CORD-19-like
+    (1000, 68, 100),
+    (257, 1024, 128),    # envelope edges
+]
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_matches_two_pass(m, n, k, dtype):
+    kx, kc = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (m, n), jnp.float32).astype(dtype)
+    c = jax.random.normal(kc, (k, n), jnp.float32)
+    assert fits(k, n)
+    sums_p, counts_p, obj_p = fused_step_pallas(x, c, interpret=True)
+
+    # the kernel upcasts to fp32 before the distance matmul; give the oracle
+    # the same view so near-tie assignments agree
+    x = x.astype(jnp.float32)
+    ids, d = ops.assign(x, c, impl="ref")
+    sums_r, counts_r = ops.update(x, ids, k, impl="ref")
+    obj_r = float(jnp.sum(d))
+
+    np.testing.assert_allclose(counts_p, counts_r, atol=0)
+    np.testing.assert_allclose(sums_p, sums_r, rtol=2e-3, atol=2e-2)
+    np.testing.assert_allclose(float(obj_p), obj_r, rtol=2e-3)
+
+
+def test_ops_fused_step_dispatch():
+    x = jax.random.normal(jax.random.PRNGKey(1), (200, 16))
+    c = jax.random.normal(jax.random.PRNGKey(2), (5, 16))
+    s1, n1, o1 = ops.fused_step(x, c, impl="ref")
+    s2, n2, o2 = ops.fused_step(x, c, impl="pallas_interpret")
+    np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(n1, n2)
+    np.testing.assert_allclose(float(o1), float(o2), rtol=1e-5)
+
+
+def test_fused_step_weighted_falls_back():
+    x = jax.random.normal(jax.random.PRNGKey(1), (100, 8))
+    c = jax.random.normal(jax.random.PRNGKey(2), (4, 8))
+    w = jax.random.uniform(jax.random.PRNGKey(3), (100,))
+    sums, counts, obj = ops.fused_step(x, c, weights=w, impl="ref")
+    np.testing.assert_allclose(float(jnp.sum(counts)), float(jnp.sum(w)),
+                               rtol=1e-5)
+
+
+def test_lloyd_uses_fused_consistently():
+    from repro.core import kmeans
+    from repro.core.kmeanspp import kmeanspp
+    x = jax.random.normal(jax.random.PRNGKey(4), (2000, 12)) * 3
+    c0 = kmeanspp(x, jax.random.PRNGKey(5), 6)
+    res_ref = kmeans.lloyd(x, c0, impl="ref")
+    res_pal = kmeans.lloyd(x, c0, impl="pallas_interpret")
+    np.testing.assert_allclose(float(res_pal.objective),
+                               float(res_ref.objective), rtol=1e-3)
+
+
+@pytest.mark.parametrize("m,n,L", [(100, 7, 3), (513, 28, 3), (300, 768, 8),
+                                   (1000, 68, 128)])
+def test_kpp_probe_matches_oracle(m, n, L):
+    from repro.kernels.kpp_probe import fits as kpp_fits, kpp_probe_pallas
+    kx, kc, kd = jax.random.split(jax.random.PRNGKey(2), 3)
+    x = jax.random.normal(kx, (m, n))
+    cands = jax.random.normal(kc, (L, n))
+    d = jax.random.uniform(kd, (m,)) * 5.0
+    assert kpp_fits(L, n)
+    newd_p, pot_p = kpp_probe_pallas(x, cands, d, interpret=True)
+
+    dc = ref.pairwise_sqdist_ref(x, cands)
+    newd_r = jnp.minimum(d[:, None], dc)
+    np.testing.assert_allclose(newd_p, newd_r, rtol=2e-4, atol=1e-3)
+    np.testing.assert_allclose(pot_p, jnp.sum(newd_r, axis=0),
+                               rtol=2e-4, atol=1e-2)

@@ -1,0 +1,93 @@
+"""Per-kernel correctness: Pallas (interpret mode) vs the pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [
+    (7, 3, 2),        # tiny, everything sub-block
+    (300, 37, 10),    # non-aligned everything
+    (256, 128, 8),    # exactly one block
+    (1000, 130, 129), # k crosses a block boundary
+    (513, 260, 5),    # feature dim crosses a block boundary
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _data(m, n, k, dtype, seed=0):
+    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, n), jnp.float32).astype(dtype)
+    c = jax.random.normal(kc, (k, n), jnp.float32).astype(dtype)
+    return x, c
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_assign_matches_ref(m, n, k, dtype):
+    x, c = _data(m, n, k, dtype)
+    ids_r, d_r = ops.assign(x, c, impl="ref")
+    ids_p, d_p = ops.assign(x, c, impl="pallas_interpret")
+    np.testing.assert_allclose(d_p, d_r, rtol=2e-4, atol=1e-3)
+    # ids may differ only where two centroids are (numerically) tied
+    diff = np.asarray(ids_p != ids_r)
+    if diff.any():
+        d_full = np.asarray(ref.pairwise_sqdist_ref(x, c))
+        ties = np.abs(
+            d_full[np.arange(m), np.asarray(ids_p)]
+            - d_full[np.arange(m), np.asarray(ids_r)]
+        )
+        assert ties[diff].max() < 1e-3
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_update_matches_ref(m, n, k, dtype):
+    x, c = _data(m, n, k, dtype)
+    ids, _ = ops.assign(x, c, impl="ref")
+    s_r, n_r = ops.update(x, ids, k, impl="ref")
+    s_p, n_p = ops.update(x, ids, k, impl="pallas_interpret")
+    np.testing.assert_allclose(n_p, n_r, atol=0)
+    np.testing.assert_allclose(s_p, s_r, rtol=2e-4, atol=2e-3)
+
+
+def test_assign_chunked_matches_ref():
+    x, c = _data(5000, 17, 11, jnp.float32)
+    ids_r, d_r = ops.assign(x, c, impl="ref")
+    ids_c, d_c = ops.assign(x, c, impl="ref_chunked", chunk=512)
+    np.testing.assert_array_equal(ids_c, ids_r)
+    np.testing.assert_allclose(d_c, d_r, rtol=1e-6)
+
+
+def test_update_weighted():
+    x, c = _data(200, 5, 4, jnp.float32)
+    ids, _ = ops.assign(x, c, impl="ref")
+    w = jax.random.uniform(jax.random.PRNGKey(3), (200,))
+    s, n = ops.update(x, ids, 4, weights=w)
+    # total mass conservation
+    np.testing.assert_allclose(np.sum(n), np.sum(w), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.sum(s, axis=0), np.sum(np.asarray(x) * np.asarray(w)[:, None], axis=0),
+        rtol=1e-4,
+    )
+
+
+def test_update_ignores_out_of_range_ids():
+    x = jnp.ones((10, 4))
+    ids = jnp.array([0, 1, 2, 3, -1, -1, 7, 9, 5, 0], jnp.int32)
+    s, n = ops.update(x, ids, 4, impl="pallas_interpret")
+    s_r, n_r = ops.update(x, ids, 4, impl="ref")
+    np.testing.assert_allclose(s, s_r)
+    np.testing.assert_allclose(n, n_r)
+    assert float(jnp.sum(n)) == 5.0   # only ids < 4 and >= 0 counted
+
+
+def test_min_update_ref():
+    x = jax.random.normal(jax.random.PRNGKey(0), (50, 8))
+    d0 = jnp.full((50,), jnp.inf)
+    c_new = x[7]
+    d = ref.min_update_ref(d0, x, c_new)
+    assert float(d[7]) < 1e-10
+    assert (np.asarray(d) >= 0).all()

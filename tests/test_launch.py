@@ -1,0 +1,99 @@
+"""Launch-layer units that run on one device: HLO collective parser, input
+specs, sharding rules, roofline math."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.shapes import SHAPES
+from repro.launch import hlo_analysis, roofline, specs
+from repro.models.registry import LM_ARCHS, get_config
+from repro.train import sharding as sh
+
+HLO = """
+HloModule test
+ENTRY %main (p0: f32[16,128]) -> f32[16,128] {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ag = f32[64,128]{1,0} all-gather(f32[16,128]{1,0} %p0), replica_groups={}
+  %c = f32[16,128]{1,0} constant(0)
+  %ar = f32[16,128]{1,0} all-reduce(f32[16,128]{1,0} %c), to_apply=%add
+  %rs-start = f32[4,128]{1,0} reduce-scatter-start(f32[16,128]{1,0} %c)
+  %rs-done = f32[4,128]{1,0} reduce-scatter-done(%rs-start)
+  %add2 = f32[16,128]{1,0} add(%p0, %c)
+  ROOT %out = f32[16,128]{1,0} copy(%add2)
+}
+"""
+
+
+def test_collective_parser():
+    res = hlo_analysis.collective_bytes(HLO)
+    f = 16 * 128 * 4
+    assert res["by_op"]["all-gather"] == f
+    assert res["by_op"]["all-reduce"] == f
+    assert res["by_op"]["reduce-scatter"] == f
+    assert res["count"] == 3
+    assert res["total"] == 3 * f
+
+
+def test_collective_parser_ignores_compute():
+    res = hlo_analysis.collective_bytes(
+        "%d = f32[8,8]{1,0} dot(f32[8,8] %a, f32[8,8] %b)")
+    assert res["total"] == 0
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_input_specs_all_cells(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    sp = specs.input_specs(cfg, shape)
+    if shape.kind == "train":
+        B, St = sp["tokens"].shape
+        assert B == shape.global_batch
+        total = St + (cfg.frontend_len if cfg.family == "vlm" else 0)
+        assert total == shape.seq_len
+    if shape.kind == "decode":
+        assert sp["token"].shape == (shape.global_batch, 1)
+        if cfg.family != "ssm":
+            assert sp["cache"]["k"].shape[2] == shape.seq_len
+        # no array was allocated
+        assert isinstance(sp["token"], jax.ShapeDtypeStruct)
+
+
+def test_param_pspec_rules():
+    import types
+    import numpy as np
+    # fabricated 4x16 mesh: spec() only reads axis_names / devices.shape
+    mesh = types.SimpleNamespace(axis_names=("data", "model"),
+                                 devices=np.zeros((4, 16)))
+    # divisible dims: sharded as requested
+    assert sh.spec(mesh, "model", "fsdp", shape=(128, 64)) == \
+        P("model", "data")
+    # non-divisible dim falls back to replicated (e.g. vocab 127 on 16-way)
+    spec = sh.spec(mesh, "model", "fsdp", shape=(127, 64))
+    assert spec[0] is None
+    assert spec[1] == "data"
+
+
+def test_roofline_terms():
+    out = roofline.roofline_terms(197e12, 819e9 * 2, 50e9)
+    assert out["dominant"] == "memory"
+    assert abs(out["compute_s"] - 1.0) < 1e-9
+    assert abs(out["memory_s"] - 2.0) < 1e-9
+    assert abs(out["roofline_fraction"] - 0.5) < 1e-9
+
+
+def test_model_flops_kinds():
+    cfg = get_config("llama3.2-1b")
+    tr = roofline.model_flops(cfg, SHAPES["train_4k"])
+    pf = roofline.model_flops(cfg, SHAPES["prefill_32k"])
+    dc = roofline.model_flops(cfg, SHAPES["decode_32k"])
+    n = cfg.param_count()
+    assert tr == 6.0 * n * 256 * 4096
+    assert pf == 2.0 * n * 32 * 32768
+    assert dc == 2.0 * n * 128
+
+
+def test_moe_active_flops():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    assert cfg.active_param_count() < 0.12 * cfg.param_count()

@@ -1,0 +1,80 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import chunk_step, init_state, lloyd
+from repro.kernels import ops, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+dims = st.tuples(
+    st.integers(4, 200),      # m
+    st.integers(1, 40),       # n
+    st.integers(1, 12),       # k
+)
+
+
+@given(dims, st.integers(0, 2**31 - 1))
+def test_assign_invariants(mnk, seed):
+    m, n, k = mnk
+    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, n))
+    c = jax.random.normal(kc, (k, n))
+    ids, d = ops.assign(x, c, impl="ref")
+    assert (np.asarray(d) >= 0).all()
+    assert (np.asarray(ids) >= 0).all() and (np.asarray(ids) < k).all()
+    # the reported distance is the minimum over all centroids
+    full = np.asarray(ref.pairwise_sqdist_ref(x, c))
+    np.testing.assert_allclose(np.asarray(d), full.min(axis=1), rtol=1e-5,
+                               atol=1e-5)
+
+
+@given(dims, st.integers(0, 2**31 - 1))
+def test_update_mass_conservation(mnk, seed):
+    m, n, k = mnk
+    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, n))
+    ids = jax.random.randint(kc, (m,), 0, k)
+    sums, counts = ops.update(x, ids, k, impl="ref")
+    np.testing.assert_allclose(float(jnp.sum(counts)), m)
+    np.testing.assert_allclose(
+        np.asarray(jnp.sum(sums, 0)), np.asarray(jnp.sum(x, 0)),
+        rtol=1e-3, atol=1e-3)
+
+
+@given(dims, st.integers(0, 2**31 - 1))
+def test_pallas_interpret_matches_ref(mnk, seed):
+    m, n, k = mnk
+    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, n))
+    c = jax.random.normal(kc, (k, n))
+    _, d_r = ops.assign(x, c, impl="ref")
+    _, d_p = ops.assign(x, c, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(d_p), np.asarray(d_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(2, 6), st.integers(0, 2**31 - 1))
+def test_lloyd_never_increases_objective(k, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (120, 6)) * 3
+    c0 = x[:k]
+    res0 = lloyd(x, c0, max_iters=1, tol=0.0)
+    res5 = lloyd(x, c0, max_iters=8, tol=0.0)
+    assert float(res5.objective) <= float(res0.objective) + 1e-3
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_chunk_step_incumbent_monotone(seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (400, 5))
+    state = init_state(4, 5)
+    prev = float("inf")
+    for i in range(4):
+        key, k1 = jax.random.split(key)
+        state, _ = chunk_step(x, state, k1)
+        assert float(state.f_best) <= prev + 1e-6
+        prev = float(state.f_best)

@@ -1,0 +1,66 @@
+"""Unit tests for the sharding rule tables (pure logic, fabricated meshes)."""
+import types
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models import flags
+from repro.train import sharding as sh
+
+MESH = types.SimpleNamespace(axis_names=("data", "model"),
+                             devices=np.zeros((16, 16)))
+POD_MESH = types.SimpleNamespace(axis_names=("pod", "data", "model"),
+                                 devices=np.zeros((2, 16, 16)))
+
+
+def test_batch_axes_adapt_to_pod():
+    assert sh.physical_axes(MESH, "batch") == ("data",)
+    assert sh.physical_axes(POD_MESH, "batch") == ("pod", "data")
+    assert sh.physical_axes(POD_MESH, "fsdp") == ("pod", "data")
+
+
+def test_kv_cache_heads_sharded_when_divisible():
+    # phi3/deepseek-style: KV=16 divides the 16-way model axis
+    logical = sh.kv_cache_logical(MESH, (32, 128, 32768, 16, 128))
+    assert logical == (None, "batch", None, "model", None)
+
+
+def test_kv_cache_seq_fallback_for_gqa():
+    # llama-style: KV=8 does not divide 16 -> sequence over model
+    flags.KV_SHARD_SEQ = True
+    logical = sh.kv_cache_logical(MESH, (16, 128, 32768, 8, 64))
+    assert logical == (None, "batch", "seqtp", None, None)
+    flags.KV_SHARD_SEQ = False
+    logical = sh.kv_cache_logical(MESH, (16, 128, 32768, 8, 64))
+    assert logical == (None, "batch", None, None, None)   # pre-fix baseline
+    flags.KV_SHARD_SEQ = True
+
+
+def test_kv_cache_batch1_long_context():
+    # long_500k: B=1 -> sequence over the data axes
+    logical = sh.kv_cache_logical(MESH, (26, 1, 524288, 4, 256))
+    assert logical[1] is None
+    assert logical[2] == "seq"
+
+
+def test_param_rules_expert_weights():
+    spec = sh.param_pspec(
+        (types.SimpleNamespace(key="layers"), types.SimpleNamespace(key="moe"),
+         types.SimpleNamespace(key="e_gate")),
+        (94, 128, 4096, 1536))
+    assert spec == (None, "expert", "fsdp", None)
+
+
+def test_param_rules_unknown_replicated():
+    spec = sh.param_pspec((types.SimpleNamespace(key="mystery"),), (3, 4))
+    assert spec == (None, None)
+
+
+def test_spec_divisibility_guard():
+    # mamba2 vocab 50280 is not divisible by 16: embedding vocab replicated
+    s = sh.spec(MESH, "model", "fsdp", shape=(50280, 2560))
+    assert s[0] is None and s[1] == "data"
+    # qwen3 vocab divides: sharded
+    s = sh.spec(MESH, "model", "fsdp", shape=(151936, 4096))
+    assert s == P("model", "data")

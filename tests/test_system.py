@@ -1,0 +1,56 @@
+"""End-to-end behaviour of the paper's system (integration tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import big_means, full_assignment, full_objective
+from repro.core.baselines import forgy_kmeans
+from repro.data.synthetic import GMMSpec, gmm_dataset
+
+
+def test_bigmeans_recovers_gmm_structure():
+    """With well-separated components, Big-means must recover the k true
+    means while clustering only a fraction of the data per chunk."""
+    spec = GMMSpec(m=20000, n=6, components=5, spread=10.0, seed=33)
+    X = gmm_dataset(spec)
+    state, infos = big_means(X, jax.random.PRNGKey(0), k=5, s=1000,
+                             n_chunks=5)
+    ids, f = full_assignment(X, state.centroids)
+    # every cluster populated, objective near the noise floor (n per point)
+    counts = np.bincount(np.asarray(ids), minlength=5)
+    assert (counts > 0).all()
+    f_per_point = float(f) / X.shape[0]
+    assert f_per_point < 1.5 * spec.n          # ~n for a perfect fit
+
+
+def test_bigmeans_improves_with_more_chunks():
+    X = gmm_dataset(GMMSpec(m=30000, n=10, components=12, spread=3.0, seed=5))
+    key = jax.random.PRNGKey(1)
+    st_few, _ = big_means(X, key, k=12, s=500, n_chunks=2)
+    st_many, _ = big_means(X, key, k=12, s=500, n_chunks=40)
+    f_few = float(full_objective(X, st_few.centroids))
+    f_many = float(full_objective(X, st_many.centroids))
+    assert f_many <= f_few * 1.001             # more data -> no worse (§2.2 p3)
+
+
+def test_bigmeans_beats_forgy_on_hard_instance():
+    """Forgy K-means is prone to bad local minima on many-component data;
+    the decomposition's natural shaking escapes them (paper Tables 3-4)."""
+    X = gmm_dataset(GMMSpec(m=20000, n=8, components=20, spread=8.0, seed=8))
+    f_bm, f_fg = [], []
+    for i in range(3):
+        key = jax.random.PRNGKey(100 + i)
+        st, _ = big_means(X, key, k=20, s=1500, n_chunks=30)
+        f_bm.append(float(full_objective(X, st.centroids)))
+        res = forgy_kmeans(X, key, k=20)
+        f_fg.append(float(res.objective))
+    assert np.mean(f_bm) <= np.mean(f_fg)
+
+
+def test_final_assignment_pass():
+    X = gmm_dataset(GMMSpec(m=5000, n=4, components=3, seed=9))
+    state, _ = big_means(X, jax.random.PRNGKey(3), k=3, s=500, n_chunks=10)
+    ids, f = full_assignment(X, state.centroids)
+    assert ids.shape == (5000,)
+    np.testing.assert_allclose(
+        float(f), float(full_objective(X, state.centroids)), rtol=1e-6)
