@@ -1,0 +1,144 @@
+"""Chunk-pipeline throughput: chunks/sec of the batched Big-means driver.
+
+Measures steady-state chunks/sec of ``big_means_batched`` for batch sizes
+{1, 4, 16} at the paper's default shape (k=25, n=20, s=16384) on the
+reference (jnp) path, at a FIXED total chunk budget, plus a row for the
+stream-mesh variant (batch sharded over the host's XLA devices — the
+in-core analogue of the sharded driver's worker parallelism).
+
+Timing protocol: each variant is run at R and 2R rounds and the throughput
+is computed from the *incremental* cost of the extra R rounds (pairwise
+per-rep deltas, median).  This cancels compile time and the one-shot cold
+K-means++ seeding of round 1, which is a per-stream cost that would bias
+the comparison against large batches.
+
+The achievable speedup is host-dependent: chunk compute at this shape is
+memory-bandwidth-bound, so on small CPU hosts (e.g. 2-vCPU CI containers)
+the batched rows saturate the memory bus and the measured ratio understates
+what dispatch-bound hosts and the batched Pallas kernel path deliver.  The
+JSON records the host context (cpu count, devices) alongside the rows so
+trajectories are compared like-for-like.
+
+Writes BENCH_batched.json at the repo root (committed — the perf
+trajectory future PRs regress against) and results/batched_throughput.csv.
+
+    PYTHONPATH=src python -m benchmarks.batched_throughput [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import os
+
+# Expose the host's cores as XLA devices so the stream-mesh row can shard
+# streams across them (must happen before jax initializes its backends).
+if "XLA_FLAGS" not in os.environ:
+    _cores = os.cpu_count() or 1
+    if _cores > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={_cores}"
+        )
+
+import time
+
+import jax
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+K, N, S = 25, 20, 16384          # paper default shape (HEPMASS-like k, n)
+BATCHES = (1, 4, 16)
+
+
+def _measure(run, rounds, chunks, reps):
+    """Median pairwise (2R - R) delta: steady-state cost of R extra rounds."""
+    run(rounds)                              # compile + warm caches
+    run(2 * rounds)
+    deltas = []
+    for _ in range(reps):
+        t0 = time.monotonic()
+        run(rounds)
+        t1 = time.monotonic()
+        st = run(2 * rounds)
+        deltas.append((time.monotonic() - t1) - (t1 - t0))
+    dt = float(np.median(deltas))
+    return dt, chunks / dt, st
+
+
+def bench(total_chunks: int, reps: int, max_iters: int):
+    from repro.core import big_means_batched
+    from repro.data.synthetic import GMMSpec, gmm_dataset
+    from repro.launch.mesh import make_mesh
+
+    X = gmm_dataset(GMMSpec(m=200_000, n=N, components=K, seed=12))
+    key = jax.random.PRNGKey(0)
+    ndev = len(jax.devices())
+    rows = []
+
+    def variant(batch, mesh, label):
+        rounds = max(2, total_chunks // batch)
+
+        def run(r):
+            st, _ = big_means_batched(
+                X, key, k=K, s=S, batch=batch, rounds=r,
+                max_iters=max_iters, impl="ref", mesh=mesh)
+            st.f_best.block_until_ready()
+            return st
+
+        dt, cps, st = _measure(run, rounds, rounds * batch, reps)
+        rows.append({
+            "variant": label, "batch": batch, "rounds": rounds,
+            "chunks": rounds * batch, "k": K, "n": N, "s": S, "impl": "ref",
+            "wall_s": round(dt, 3), "chunks_per_s": round(cps, 2),
+            "f_best": float(st.f_best),
+        })
+        print(f"{label:16s} batch={batch:<3d} rounds={rounds:<4d} "
+              f"wall={dt:6.2f}s  chunks/s={cps:7.2f}  "
+              f"f_best={float(st.f_best):.4e}", flush=True)
+
+    for batch in BATCHES:
+        variant(batch, None, "local")
+    if ndev >= 2:
+        mesh = make_mesh((ndev,), ("streams",))
+        batch = max(b for b in BATCHES if b % ndev == 0)
+        variant(batch, mesh, f"streams-mesh[{ndev}]")
+
+    base = rows[0]["chunks_per_s"]
+    for r in rows:
+        r["speedup_vs_batch1"] = round(r["chunks_per_s"] / base, 2)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer chunks/reps (CI smoke)")
+    args = ap.parse_args()
+
+    total = 64 if args.fast else 128
+    reps = 2 if args.fast else 5
+    rows = bench(total, reps, max_iters=300)
+
+    os.makedirs(os.path.join(REPO, "results"), exist_ok=True)
+    csv_path = os.path.join(REPO, "results", "batched_throughput.csv")
+    with open(csv_path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+
+    json_path = os.path.join(REPO, "BENCH_batched.json")
+    with open(json_path, "w") as f:
+        json.dump({
+            "shape": {"k": K, "n": N, "s": S},
+            "impl": "ref",
+            "host": {"cpu_count": os.cpu_count(),
+                     "xla_devices": len(jax.devices())},
+            "protocol": "steady-state: median pairwise (2R-R) round deltas",
+            "rows": rows,
+        }, f, indent=1)
+    print(f"# wrote {json_path}")
+
+
+if __name__ == "__main__":
+    main()

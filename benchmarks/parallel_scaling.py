@@ -23,16 +23,15 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, time
 import jax
-from jax.sharding import AxisType
 from repro.core import big_means_sharded, full_objective
 from repro.data.synthetic import GMMSpec, gmm_dataset
+from repro.launch.mesh import make_mesh
 
 X = gmm_dataset(GMMSpec(m=64000, n=16, components=12, seed=6))
 TOTAL_CHUNKS = 32
 out = []
 for w in (1, 2, 4, 8):
-    mesh = jax.make_mesh((w, 8 // w), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((w, 8 // w), ("data", "model"))
     for sync in (1, 4):
         cpw = TOTAL_CHUNKS // w
         if cpw % sync:

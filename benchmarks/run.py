@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import argparse
 import csv
+import json
 import os
 import time
 
@@ -26,9 +27,13 @@ from benchmarks import common
 RESULTS = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "results")
 
+_ROWS: list = []        # every _emit row, for the --smoke JSON artifact
+
 
 def _emit(name, us, derived):
     print(f"{name},{us:.1f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": round(us, 1),
+                  "derived": derived})
 
 
 def bench_tables(rows, outdir):
@@ -122,15 +127,45 @@ def bench_kernels(outdir):
                       f"gflops={flops / (us * 1e-6) / 1e9:.2f}")
 
 
+def bench_smoke(outdir):
+    """CI smoke run: kernel microbenchmarks + a minimal batched-throughput
+    probe, written to results/BENCH_smoke.json (uploaded as a CI artifact)."""
+    from repro.core import big_means_batched
+    from repro.data.synthetic import GMMSpec, gmm_dataset
+
+    bench_kernels(outdir)
+    X = gmm_dataset(GMMSpec(m=40000, n=20, components=15, seed=4))
+    for batch in (1, 4):
+        rounds = 8 // batch
+        fn = lambda: big_means_batched(
+            X, jax.random.PRNGKey(0), k=25, s=4096, batch=batch,
+            rounds=rounds, impl="ref")[0].f_best.block_until_ready()
+        fn()                                   # compile
+        t0 = time.monotonic()
+        fn()
+        dt = time.monotonic() - t0
+        _emit(f"smoke/batched/b{batch}", dt * 1e6 / 8,
+              f"chunks_per_s={8 / dt:.2f}")
+    path = os.path.join(outdir, "BENCH_smoke.json")
+    with open(path, "w") as f:
+        json.dump(_ROWS, f, indent=1)
+    print(f"# wrote {path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["tables", "chunk_sweep", "kernels"])
     ap.add_argument("--fast", action="store_true",
                     help="reduced suite for smoke runs")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke subset; writes results/BENCH_smoke.json")
     args = ap.parse_args()
     os.makedirs(RESULTS, exist_ok=True)
 
+    if args.smoke:
+        bench_smoke(RESULTS)
+        return
     if args.only in (None, "kernels"):
         bench_kernels(RESULTS)
     if args.only in (None, "chunk_sweep"):

@@ -16,14 +16,24 @@ fed to the jitted ``chunk_step``.  Design properties (DESIGN.md §6):
   ``fetch_timeout`` without violating correctness (same argument as above).
 * **elasticity** — the state carries no topology; rescaling workers between
   restarts only changes how many chunk streams advance per wall-clock second.
+* **pipelining** — a background thread prefetches up to ``prefetch`` chunks
+  into a bounded queue and stages them on device (``jax.device_put``), so
+  provider fetch and host→device transfer overlap device compute instead of
+  blocking it.  ``batch`` > 1 feeds B chunks at a time to the batched
+  driver (``chunk_step_batched``): B Lloyd searches advance concurrently
+  against the incumbent and the best result is kept — the single-device
+  analogue of the sharded driver's worker streams.
 """
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 import time
 from typing import Callable, Iterator
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.cluster import checkpoint
@@ -41,6 +51,8 @@ class RunnerConfig:
     tol: float = 1e-4
     candidates: int = 3
     impl: str = "auto"
+    batch: int = 1                    # concurrent chunk streams per step
+    prefetch: int = 2                 # chunk-queue depth; 0 = synchronous
     time_budget_s: float | None = None   # paper's cpu_max
     ckpt_dir: str | None = None
     ckpt_every: int = 100
@@ -62,6 +74,82 @@ class RunnerMetrics:
     wall_time_s: float = 0.0
     f_best: float = float("inf")
     trace: list = dataclasses.field(default_factory=list)
+
+
+class _Prefetcher:
+    """Background chunk fetcher: provider call + np conversion + device_put
+    run off the main thread, double-buffered through a bounded queue.
+
+    Yields ``(chunk_id, chunk-or-None)`` in id order; ``None`` marks a
+    failed fetch (the provider raised) so the consumer can account for it.
+    """
+
+    _DONE = object()
+
+    def __init__(self, provider, ids, depth,
+                 fault_injector=None):
+        self._provider = provider
+        self._ids = ids
+        self._fault_injector = fault_injector
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._thread.start()
+
+    def _fetch(self, cid):
+        try:
+            if self._fault_injector is not None:
+                self._fault_injector(cid)
+            arr = np.asarray(self._provider(cid), dtype=np.float32)
+            return jax.device_put(arr)
+        except Exception:
+            return None
+
+    def _put(self, item) -> bool:
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _work(self):
+        for cid in self._ids:
+            if self._stop.is_set():
+                return
+            if not self._put((cid, self._fetch(cid))):
+                return
+        self._put(self._DONE)
+
+    def __iter__(self) -> Iterator:
+        while True:
+            item = self._q.get()
+            if item is self._DONE:
+                return
+            yield item
+
+    def close(self):
+        self._stop.set()
+        # Drain so a blocked producer can observe the stop flag and exit.
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5.0)
+
+
+def _sync_chunks(provider, ids, fault_injector):
+    """prefetch=0 fallback: fetch in the main thread (debug / determinism)."""
+    for cid in ids:
+        try:
+            if fault_injector is not None:
+                fault_injector(cid)
+            arr = np.asarray(provider(cid), dtype=np.float32)
+            yield cid, jax.device_put(arr)
+        except Exception:
+            yield cid, None
 
 
 def run(
@@ -89,49 +177,102 @@ def run(
     rung, stall = 0, 0
     last_s = cfg.s
 
-    for chunk_id in range(start_chunk, cfg.n_chunks):
-        if cfg.time_budget_s is not None:
-            if time.monotonic() - t0 > cfg.time_budget_s:
-                break
-        # Per-chunk keys are folded from (seed, chunk_id): restarts and
-        # worker-count changes replay the identical sample stream.
-        ck = jax.random.fold_in(key, chunk_id)
-        try:
-            if fault_injector is not None:
-                fault_injector(chunk_id)
-            chunk = np.asarray(provider(chunk_id), dtype=np.float32)
-        except Exception:
-            metrics.chunks_failed += 1
-            continue        # skip: uniform chunks are interchangeable
-        s_now = ladder[rung]
-        if chunk.shape[0] > s_now:
-            chunk = chunk[:s_now]       # VNS: shrink the neighbourhood
-        if chunk.shape[0] != last_s and np.isfinite(float(state.f_best)):
-            # objectives are sums over s points: rescale the incumbent's
-            # objective so acceptance compares per-point quality
-            state = state._replace(
-                f_best=state.f_best * (chunk.shape[0] / last_s))
-        last_s = chunk.shape[0]
-        state, info = bigmeans.chunk_step(
-            jax.numpy.asarray(chunk), state, ck,
+    ids = range(start_chunk, cfg.n_chunks)
+    source = (
+        _Prefetcher(provider, ids, cfg.prefetch, fault_injector)
+        if cfg.prefetch > 0
+        else _sync_chunks(provider, ids, fault_injector)
+    )
+
+    def step_batch(state, pending):
+        """Advance the incumbent by len(pending) concurrent chunk streams."""
+        cids = [cid for cid, _ in pending]
+        # Per-chunk keys are folded from (seed, chunk_id): restarts, batch
+        # sizes and worker-count changes replay the identical sample stream.
+        cks = [jax.random.fold_in(key, cid) for cid in cids]
+        if len(pending) == 1:
+            return bigmeans.chunk_step(
+                pending[0][1], state, cks[0],
+                max_iters=cfg.max_iters, tol=cfg.tol,
+                candidates=cfg.candidates, impl=cfg.impl,
+            )
+        chunks = jnp.stack([c for _, c in pending])
+        states = bigmeans.broadcast_state(state, len(pending))
+        states, info = bigmeans.chunk_step_batched(
+            chunks, states, jnp.stack(cks),
             max_iters=cfg.max_iters, tol=cfg.tol,
             candidates=cfg.candidates, impl=cfg.impl,
         )
-        metrics.chunks_done += 1
-        if bool(info.accepted):
-            metrics.accepted += 1
+        return bigmeans.reduce_state(states, base=state), info
+
+    def consume_info(info):
+        nonlocal rung, stall
+        n_acc = int(np.sum(np.asarray(info.accepted)))
+        metrics.accepted += n_acc
+        if n_acc:
             rung, stall = 0, 0          # VNS: success -> base neighbourhood
         elif cfg.vns_ladder:
-            stall += 1
+            stall += int(np.size(np.asarray(info.accepted)))
             if stall >= cfg.vns_patience:
                 rung = min(rung + 1, len(ladder) - 1)
                 stall = 0
-        if cfg.log_every and metrics.chunks_done % cfg.log_every == 0:
-            metrics.trace.append(
-                (chunk_id, float(state.f_best), float(info.f_new))
-            )
-        if cfg.ckpt_dir and (chunk_id + 1) % cfg.ckpt_every == 0:
-            checkpoint.save(cfg.ckpt_dir, chunk_id + 1, (state, key))
+
+    pending: list = []
+    last_cid = start_chunk - 1
+    try:
+        for chunk_id, chunk in source:
+            if cfg.time_budget_s is not None:
+                if time.monotonic() - t0 > cfg.time_budget_s:
+                    break
+            if chunk is None:
+                metrics.chunks_failed += 1
+                continue
+            s_now = ladder[rung]
+            if chunk.shape[0] > s_now:
+                chunk = chunk[:s_now]       # VNS: shrink the neighbourhood
+            if pending and chunk.shape != pending[0][1].shape:
+                # ragged chunk (short tail / VNS rung change mid-batch):
+                # flush the homogeneous batch first, then start a new one
+                state, info = step_batch(state, pending)
+                metrics.chunks_done += len(pending)
+                last_cid = pending[-1][0]
+                pending = []
+                consume_info(info)
+            if chunk.shape[0] != last_s and np.isfinite(float(state.f_best)):
+                # objectives are sums over s points: rescale the incumbent's
+                # objective so acceptance compares per-point quality
+                state = state._replace(
+                    f_best=state.f_best * (chunk.shape[0] / last_s))
+            last_s = chunk.shape[0]
+            pending.append((chunk_id, chunk))
+            if len(pending) < cfg.batch:
+                continue
+
+            state, info = step_batch(state, pending)
+            metrics.chunks_done += len(pending)
+            last_cid = pending[-1][0]
+            pending = []
+            consume_info(info)
+            if cfg.log_every and metrics.chunks_done % cfg.log_every < cfg.batch:
+                metrics.trace.append(
+                    (last_cid, float(state.f_best),
+                     float(np.min(np.asarray(info.f_new))))
+                )
+            if cfg.ckpt_dir and (last_cid + 1) % cfg.ckpt_every < cfg.batch:
+                checkpoint.save(cfg.ckpt_dir, last_cid + 1, (state, key))
+            if cfg.time_budget_s is not None:
+                if time.monotonic() - t0 > cfg.time_budget_s:
+                    break
+        else:
+            if pending:                     # final partial batch
+                state, info = step_batch(state, pending)
+                metrics.chunks_done += len(pending)
+                last_cid = pending[-1][0]
+                pending = []
+                consume_info(info)
+    finally:
+        if isinstance(source, _Prefetcher):
+            source.close()
 
     if cfg.ckpt_dir:
         checkpoint.save(cfg.ckpt_dir, metrics.chunks_done + start_chunk,

@@ -17,6 +17,10 @@ class BigMeansWorkload:
     max_iters: int = 300
     tol: float = 1e-4
     candidates: int = 3
+    # In-core chunk parallelism (batched driver): B incumbent streams per
+    # device, and the host runner's prefetch queue depth.
+    batch: int = 8
+    prefetch: int = 2
 
 
 CONFIG = BigMeansWorkload()

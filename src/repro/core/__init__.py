@@ -3,13 +3,17 @@ from repro.core.bigmeans import (
     BigMeansState,
     ChunkInfo,
     big_means,
+    big_means_batched,
     big_means_sharded,
+    broadcast_state,
     chunk_step,
+    chunk_step_batched,
     init_state,
+    reduce_state,
     sample_chunk,
 )
-from repro.core.kmeans import KMeansResult, lloyd
-from repro.core.kmeanspp import kmeanspp, seed
+from repro.core.kmeans import KMeansResult, lloyd, lloyd_batched
+from repro.core.kmeanspp import kmeanspp, seed, seed_batched
 from repro.core.objective import chunk_objective, full_assignment, full_objective
 
 __all__ = [
@@ -17,14 +21,20 @@ __all__ = [
     "ChunkInfo",
     "KMeansResult",
     "big_means",
+    "big_means_batched",
     "big_means_sharded",
+    "broadcast_state",
     "chunk_objective",
     "chunk_step",
+    "chunk_step_batched",
     "full_assignment",
     "full_objective",
     "init_state",
     "kmeanspp",
     "lloyd",
+    "lloyd_batched",
+    "reduce_state",
     "sample_chunk",
     "seed",
+    "seed_batched",
 ]

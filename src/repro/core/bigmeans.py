@@ -1,9 +1,16 @@
 """Big-means (Algorithm 3): decomposition-driven global search for MSSC.
 
-Three drivers share one jitted ``chunk_step``:
+Four drivers share the jitted chunk-step core:
 
 * :func:`big_means` — the paper's sequential algorithm as a ``lax.scan`` over
   uniformly sampled chunks (in-core dataset).
+* :func:`big_means_batched` — B incumbent streams advance through Lloyd
+  concurrently on one device via :func:`chunk_step_batched` (optionally
+  sharding the stream axis over a ``streams`` mesh); the streams exchange
+  incumbents by argmin-reduce every ``sync_every`` rounds.  ``batch=1``
+  follows the same key schedule and chunk stream as :func:`big_means`
+  (fp-identical on the reference path; the Pallas path runs the batched
+  kernel variant, so agreement there is to kernel fp tolerance).
 * :func:`big_means_sharded` — the multi-worker generalization: every worker
   (one group of the ``workers`` mesh axis) runs an independent chunk stream
   against its own incumbent and the incumbents are exchanged by a tiny
@@ -11,7 +18,7 @@ Three drivers share one jitted ``chunk_step``:
   "collective" mode, ``sync_every=n_chunks`` the "competitive" mode; world
   size 1 recovers the paper exactly.
 * ``repro.cluster.runner`` — host-streaming driver (out-of-core data,
-  checkpoints, stragglers) built on the same ``chunk_step``.
+  prefetch pipeline, checkpoints, stragglers) built on the same chunk steps.
 """
 from __future__ import annotations
 
@@ -23,6 +30,13 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import kmeans, kmeanspp
+
+if hasattr(jax, "shard_map"):
+    _shard_map = functools.partial(jax.shard_map, check_vma=False)
+else:   # jax < 0.6: experimental API, `check_rep` instead of `check_vma`
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+    _shard_map = functools.partial(_experimental_shard_map, check_rep=False)
 
 
 class BigMeansState(NamedTuple):
@@ -67,14 +81,19 @@ def chunk_step(
     k = state.centroids.shape[0]
     s = points.shape[0]
 
-    # line 7: re-initialize degenerate centroids with K-means++ on this chunk
-    c_init = kmeanspp.seed(
-        points,
-        key,
-        k,
-        init=state.centroids,
-        degenerate=state.degenerate,
-        candidates=candidates,
+    # line 7: re-initialize degenerate centroids with K-means++ on this chunk.
+    # Seeding is the identity when no slot is degenerate, so the whole probe
+    # loop is skipped at runtime in that (steady-state) case — on CPU the
+    # D^2 probes are the dominant per-chunk cost.
+    c_init = jax.lax.cond(
+        jnp.any(state.degenerate),
+        lambda: kmeanspp.seed(
+            points, key, k,
+            init=state.centroids,
+            degenerate=state.degenerate,
+            candidates=candidates,
+        ),
+        lambda: state.centroids.astype(jnp.float32),
     )
     # line 8: local search
     res = kmeans.lloyd(points, c_init, max_iters=max_iters, tol=tol, impl=impl)
@@ -157,6 +176,301 @@ def big_means(
     return state, infos
 
 
+# ---------------------------------------------------------------------------
+# Batched (single-device) chunk parallelism: B incumbent streams advance
+# through Lloyd concurrently — the in-core analogue of the sharded driver's
+# per-worker streams, with the argmin-exchange done by a gather instead of a
+# collective.
+# ---------------------------------------------------------------------------
+
+
+def broadcast_state(state: BigMeansState, batch: int) -> BigMeansState:
+    """Tile one incumbent into B streams; the stream counters start at zero
+    so :func:`reduce_state` can re-aggregate them onto a base state."""
+    zeroed = state._replace(
+        n_accepted=jnp.int32(0), n_dist_evals=jnp.float32(0.0)
+    )
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (batch,) + jnp.shape(a)), zeroed
+    )
+
+
+def reduce_state(
+    states: BigMeansState, base: BigMeansState | None = None
+) -> BigMeansState:
+    """Argmin-reduce B streams into one incumbent (in-core `_exchange_best`,
+    degenerate mask included).  Counters are summed across streams — they
+    count work done, not who won — and added onto ``base`` when given."""
+    winner = jnp.argmin(states.f_best)
+    n_acc = jnp.sum(states.n_accepted)
+    n_d = jnp.sum(states.n_dist_evals)
+    if base is not None:
+        n_acc = n_acc + base.n_accepted
+        n_d = n_d + base.n_dist_evals
+    return BigMeansState(
+        centroids=states.centroids[winner],
+        degenerate=states.degenerate[winner],
+        f_best=states.f_best[winner],
+        n_accepted=n_acc,
+        n_dist_evals=n_d,
+    )
+
+
+def _sync_streams(states: BigMeansState) -> BigMeansState:
+    """Give every stream the winner's incumbent; counters stay per-stream."""
+    winner = jnp.argmin(states.f_best)
+    batch = states.f_best.shape[0]
+
+    def tile(a):
+        return jnp.broadcast_to(a[winner], (batch,) + a.shape[1:])
+
+    return states._replace(
+        centroids=tile(states.centroids),
+        degenerate=tile(states.degenerate),
+        f_best=tile(states.f_best),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_iters", "tol", "candidates", "impl")
+)
+def chunk_step_batched(
+    points: jax.Array,
+    states: BigMeansState,
+    keys: jax.Array,
+    *,
+    max_iters: int = 300,
+    tol: float = 1e-4,
+    candidates: int = 3,
+    impl: str = "auto",
+) -> tuple[BigMeansState, ChunkInfo]:
+    """Process B chunks against B incumbent streams in one fused step.
+
+    points [B, s, n], states with leading batch axis, keys [B, ...].  Per
+    stream this is exactly :func:`chunk_step` (re-seed degenerate slots,
+    Lloyd, keep-the-best, n_d accounting); across streams everything — the
+    K-means++ probes, the Lloyd iterations, the final evaluation — runs as
+    one batched computation.
+    """
+    k = states.centroids.shape[1]
+    s = points.shape[1]
+
+    # Same runtime skip as `chunk_step`: when no stream has a degenerate
+    # slot (the steady state) the batched probe loop is bypassed entirely.
+    c_init = jax.lax.cond(
+        jnp.any(states.degenerate),
+        lambda: kmeanspp.seed_batched(
+            points, keys, k,
+            init=states.centroids,
+            degenerate=states.degenerate,
+            candidates=candidates,
+        ),
+        lambda: states.centroids.astype(jnp.float32),
+    )
+    res = kmeans.lloyd_batched(
+        points, c_init, max_iters=max_iters, tol=tol, impl=impl
+    )
+
+    accepted = res.objective < states.f_best                    # [B]
+    n_deg = jnp.sum(states.degenerate, axis=1)                  # [B]
+    n_d = states.n_dist_evals + jnp.float32(s) * (
+        jnp.float32(k) * (res.iterations + 2)
+        + jnp.float32(candidates) * n_deg
+    )
+    new_states = BigMeansState(
+        centroids=jnp.where(
+            accepted[:, None, None], res.centroids, states.centroids),
+        degenerate=jnp.where(
+            accepted[:, None], res.degenerate, states.degenerate),
+        f_best=jnp.where(accepted, res.objective, states.f_best),
+        n_accepted=states.n_accepted + accepted.astype(jnp.int32),
+        n_dist_evals=n_d,
+    )
+    info = ChunkInfo(
+        f_new=res.objective,
+        accepted=accepted,
+        lloyd_iters=res.iterations,
+        n_degenerate=jnp.sum(res.degenerate, axis=1),
+    )
+    return new_states, info
+
+
+def big_means_batched(
+    X: jax.Array,
+    key: jax.Array,
+    *,
+    k: int,
+    s: int,
+    batch: int,
+    rounds: int,
+    sync_every: int = 1,
+    max_iters: int = 300,
+    tol: float = 1e-4,
+    candidates: int = 3,
+    impl: str = "auto",
+    with_replacement: bool = True,
+    mesh=None,
+    stream_axis: str = "streams",
+) -> tuple[BigMeansState, ChunkInfo]:
+    """Batched Big-means: B incumbent streams over ``rounds`` chunk rounds.
+
+    Each round samples a ``[batch, s, n]`` chunk batch and advances all
+    streams through one :func:`chunk_step_batched`; every ``sync_every``
+    rounds the streams exchange incumbents (argmin-reduce, every stream
+    continues from the winner).  Returns the final reduced incumbent and a
+    ``[rounds * batch]`` trace.  ``batch=1`` recovers the sequential
+    :func:`big_means` with ``n_chunks=rounds`` — same key schedule, same
+    chunks, same incumbent trajectory (fp-identical on the reference
+    path; under the Pallas kernels the batched variant agrees to kernel
+    fp tolerance).
+
+    With ``mesh`` (a 1-axis mesh named ``stream_axis``), the stream axis is
+    sharded across the mesh devices: each device advances ``batch / ndev``
+    streams and the periodic exchange goes through an argmin-all-gather —
+    independent chunk streams are exactly the parallelism the paper's
+    properties 6-7 promise, so extra devices scale throughput without
+    changing the per-stream trajectories (same key schedule as the
+    single-device batched driver).
+    """
+    assert rounds % sync_every == 0, "sync_every must divide rounds"
+    if mesh is not None:
+        return _big_means_batched_sharded(
+            X, key, mesh=mesh, stream_axis=stream_axis, k=k, s=s,
+            batch=batch, rounds=rounds, sync_every=sync_every,
+            max_iters=max_iters, tol=tol, candidates=candidates, impl=impl,
+            with_replacement=with_replacement,
+        )
+    return _big_means_batched_local(
+        X, key, k=k, s=s, batch=batch, rounds=rounds, sync_every=sync_every,
+        max_iters=max_iters, tol=tol, candidates=candidates, impl=impl,
+        with_replacement=with_replacement,
+    )
+
+
+def _stream_keys(key, rounds: int, sync_every: int, batch: int):
+    """[outer, sync_every, batch, ...] key schedule: chunk (r, b) gets
+    split(key, rounds*batch)[r*batch + b] — for batch=1 this is
+    byte-identical to the sequential schedule."""
+    keys = jax.random.split(key, rounds * batch)
+    return keys.reshape(
+        (rounds // sync_every, sync_every, batch) + keys.shape[1:])
+
+
+def _stream_scan(X, states, keys, *, s, max_iters, tol, candidates, impl,
+                 with_replacement, sync_fn):
+    """Scan ``rounds`` chunk rounds over per-stream states; ``sync_fn``
+    exchanges incumbents at each sync boundary."""
+
+    def body(states, keys_i):                       # keys_i [batch, ...]
+        split = jax.vmap(jax.random.split)(keys_i)  # [batch, 2, ...]
+        ks, kc = split[:, 0], split[:, 1]
+        chunks = jax.vmap(
+            lambda kk: sample_chunk(X, kk, s, with_replacement=with_replacement)
+        )(ks)
+        return chunk_step_batched(
+            chunks, states, kc,
+            max_iters=max_iters, tol=tol, candidates=candidates, impl=impl,
+        )
+
+    def round_body(states, keys_r):                 # keys_r [sync, batch, ...]
+        states, infos = jax.lax.scan(body, states, keys_r)
+        return sync_fn(states), infos
+
+    states, infos = jax.lax.scan(round_body, states, keys)
+    # [outer, sync, batch, ...] -> [rounds * batch, ...], round-major order
+    infos = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[3:]), infos)
+    return states, infos
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k", "s", "batch", "rounds", "sync_every", "max_iters", "tol",
+        "candidates", "impl", "with_replacement",
+    ),
+)
+def _big_means_batched_local(
+    X, key, *, k, s, batch, rounds, sync_every, max_iters, tol, candidates,
+    impl, with_replacement,
+):
+    if X.dtype != jnp.bfloat16:
+        X = X.astype(jnp.float32)
+    states = broadcast_state(init_state(k, X.shape[1]), batch)
+    keys = _stream_keys(key, rounds, sync_every, batch)
+    states, infos = _stream_scan(
+        X, states, keys, s=s, max_iters=max_iters, tol=tol,
+        candidates=candidates, impl=impl, with_replacement=with_replacement,
+        sync_fn=_sync_streams,
+    )
+    return reduce_state(states), infos
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mesh", "stream_axis", "k", "s", "batch", "rounds", "sync_every",
+        "max_iters", "tol", "candidates", "impl", "with_replacement",
+    ),
+)
+def _big_means_batched_sharded(
+    X, key, *, mesh, stream_axis, k, s, batch, rounds, sync_every,
+    max_iters, tol, candidates, impl, with_replacement,
+):
+    ndev = mesh.shape[stream_axis]
+    assert batch % ndev == 0, "stream mesh axis must divide batch"
+    if X.dtype != jnp.bfloat16:
+        X = X.astype(jnp.float32)
+    n = X.shape[1]
+    keys = _stream_keys(key, rounds, sync_every, batch)
+
+    def sync(states):
+        """Global keep-the-best: local winner, then argmin-all-gather
+        across devices; every stream continues from the global winner."""
+        w = jnp.argmin(states.f_best)
+        f_all = jax.lax.all_gather(states.f_best[w], stream_axis)      # [D]
+        c_all = jax.lax.all_gather(states.centroids[w], stream_axis)
+        d_all = jax.lax.all_gather(states.degenerate[w], stream_axis)
+        g = jnp.argmin(f_all)
+        bl = states.f_best.shape[0]
+        return states._replace(
+            centroids=jnp.broadcast_to(c_all[g], states.centroids.shape),
+            degenerate=jnp.broadcast_to(d_all[g], states.degenerate.shape),
+            f_best=jnp.broadcast_to(f_all[g], (bl,)),
+        )
+
+    def worker(x_rep, keys_local):          # [outer, sync, batch/D, ...]
+        states = broadcast_state(init_state(k, n), keys_local.shape[2])
+        states, infos = _stream_scan(
+            x_rep, states, keys_local, s=s, max_iters=max_iters, tol=tol,
+            candidates=candidates, impl=impl,
+            with_replacement=with_replacement, sync_fn=sync,
+        )
+        local = reduce_state(states)
+        f_all = jax.lax.all_gather(local.f_best, stream_axis)
+        c_all = jax.lax.all_gather(local.centroids, stream_axis)
+        d_all = jax.lax.all_gather(local.degenerate, stream_axis)
+        g = jnp.argmin(f_all)
+        final = BigMeansState(
+            centroids=c_all[g],
+            degenerate=d_all[g],
+            f_best=f_all[g],
+            n_accepted=jax.lax.psum(local.n_accepted, stream_axis),
+            n_dist_evals=jax.lax.psum(local.n_dist_evals, stream_axis),
+        )
+        return final, infos
+
+    shard = _shard_map(
+        worker,
+        mesh=mesh,
+        in_specs=(P(), P(None, None, stream_axis, None)),
+        out_specs=(
+            BigMeansState(P(), P(), P(), P(), P()),
+            ChunkInfo(*([P(stream_axis)] * 4)),
+        ),
+    )
+    return shard(X, keys)
+
+
 def _exchange_best(state: BigMeansState, axis: str) -> BigMeansState:
     """Keep-the-best across workers: tiny argmin-all-reduce on (f, C)."""
     f_all = jax.lax.all_gather(state.f_best, axis)            # [W]
@@ -201,7 +515,9 @@ def big_means_sharded(
         widx = jax.lax.axis_index(axes[0])
         if len(axes) > 1:
             for a in axes[1:]:
-                widx = widx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+                # mesh.shape is static — avoids jax.lax.axis_size, which
+                # older jax versions lack inside shard_map.
+                widx = widx * mesh.shape[a] + jax.lax.axis_index(a)
         key = jax.random.fold_in(key, widx)
         state = init_state(k, x_local.shape[1])
 
@@ -231,7 +547,7 @@ def big_means_sharded(
         state = state._replace(n_dist_evals=total_nd, n_accepted=total_acc)
         return state, infos
 
-    shard = jax.shard_map(
+    shard = _shard_map(
         worker,
         mesh=mesh,
         in_specs=(P(axes), P()),
@@ -239,7 +555,6 @@ def big_means_sharded(
             BigMeansState(P(), P(), P(), P(), P()),
             ChunkInfo(*([P(axes[0])] * 4)),
         ),
-        check_vma=False,
     )
     xd = X if X.dtype == jnp.bfloat16 else X.astype(jnp.float32)
     return shard(xd, key)

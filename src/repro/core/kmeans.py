@@ -1,11 +1,24 @@
 """K-means (Lloyd) local search — Algorithm 1 of the paper.
 
-Implemented as a ``lax.while_loop`` over fused assignment/update steps so it
-jits, shards, and nests inside the Big-means chunk scan.  Convergence follows
-the paper's experimental setting: relative objective tolerance OR an
-iteration cap.  Degenerate (empty) clusters keep their previous position and
-are reported in the result mask — Big-means re-seeds them with K-means++ on
-the next chunk (the paper's degeneracy strategy).
+Implemented as a *masked bounded iteration*: the loop carry holds a
+per-search ``active`` flag and every update is gated on it, so a converged
+search becomes a no-op while the loop keeps running.  For a single chunk
+this is exactly the old ``while_loop`` semantics (the loop exits as soon as
+``active`` drops), but the scheme is also ``jax.vmap``-able: vmapping over a
+``[B, s, n]`` chunk batch turns the condition into "any stream active" and
+the masking keeps converged streams frozen — B concurrent Lloyd searches in
+one fused computation, with exact per-stream iteration counts for the
+paper's ``n_d`` accounting.
+
+:func:`lloyd_batched` is the explicitly batched variant: same masked
+scheme over a leading batch axis, routed through the batched fused kernel
+(``ops.fused_step_batched``) so all B streams advance in one kernel launch
+per iteration.
+
+Convergence follows the paper's experimental setting: relative objective
+tolerance OR an iteration cap.  Degenerate (empty) clusters keep their
+previous position and are reported in the result mask — Big-means re-seeds
+them with K-means++ on the next chunk (the paper's degeneracy strategy).
 """
 from __future__ import annotations
 
@@ -19,12 +32,12 @@ from repro.kernels import ops
 
 
 class KMeansResult(NamedTuple):
-    centroids: jax.Array       # [k, n] f32
-    objective: jax.Array       # scalar f32: f(C_final, P)
-    counts: jax.Array          # [k] f32 cluster sizes at the final assignment
-    degenerate: jax.Array      # [k] bool: counts == 0
-    iterations: jax.Array      # scalar i32: Lloyd iterations executed
-    assignments: jax.Array     # [m] i32
+    centroids: jax.Array       # [k, n] f32            (batched: [B, k, n])
+    objective: jax.Array       # scalar f32: f(C_final, P)        ([B])
+    counts: jax.Array          # [k] f32 final cluster sizes      ([B, k])
+    degenerate: jax.Array      # [k] bool: counts == 0            ([B, k])
+    iterations: jax.Array      # scalar i32: Lloyd iterations     ([B])
+    assignments: jax.Array     # [m] i32                          ([B, m])
 
 
 class _Carry(NamedTuple):
@@ -32,6 +45,29 @@ class _Carry(NamedTuple):
     f_prev: jax.Array
     f_curr: jax.Array
     it: jax.Array
+    active: jax.Array
+
+
+def _advance(step_fn, s: _Carry, *, max_iters: int, tol: float,
+             bcast) -> _Carry:
+    """One masked Lloyd iteration: inactive streams are no-ops.
+
+    ``bcast`` reshapes the [B]-shaped (or scalar) active mask for the
+    centroid arrays.  The convergence test reproduces the paper's §5.7
+    rule — stop when |f_prev - f_curr| <= tol * |f_prev|, or at the
+    iteration cap; the first two iterations run unconditionally.
+    """
+    new_c, f = step_fn(s.centroids)
+    act = s.active
+    new_c = jnp.where(bcast(act), new_c, s.centroids)
+    f_prev = jnp.where(act, s.f_curr, s.f_prev)
+    f_curr = jnp.where(act, f, s.f_curr)
+    it = s.it + act.astype(jnp.int32)
+    converged = jnp.abs(f_prev - f_curr) <= tol * jnp.abs(f_prev)
+    keep_going = jnp.logical_and(
+        it < max_iters, jnp.logical_or(it < 2, ~converged)
+    )
+    return _Carry(new_c, f_prev, f_curr, it, jnp.logical_and(act, keep_going))
 
 
 @functools.partial(jax.jit, static_argnames=("max_iters", "tol", "impl"))
@@ -61,21 +97,13 @@ def lloyd(
         new_c = jnp.where(counts[:, None] > 0, sums / counts[:, None], c)
         return new_c, f
 
-    def cond(s: _Carry):
-        # Relative-tolerance convergence on consecutive objectives (paper §5.7):
-        # stop when |f_prev - f_curr| <= tol * f_prev, or at the iteration cap.
-        # The first two iterations run unconditionally (f_prev/f_curr start inf).
-        converged = jnp.abs(s.f_prev - s.f_curr) <= tol * jnp.abs(s.f_prev)
-        return jnp.logical_and(
-            s.it < max_iters, jnp.logical_or(s.it < 2, ~converged)
-        )
-
     def body(s: _Carry):
-        new_c, f = step(s.centroids)
-        return _Carry(new_c, s.f_curr, f, s.it + 1)
+        return _advance(step, s, max_iters=max_iters, tol=tol,
+                        bcast=lambda a: a)
 
-    init = _Carry(init_centroids, inf, inf, jnp.int32(0))
-    final = jax.lax.while_loop(cond, body, init)
+    init = _Carry(init_centroids, inf, inf, jnp.int32(0),
+                  jnp.bool_(max_iters > 0))
+    final = jax.lax.while_loop(lambda s: s.active, body, init)
 
     # One last assignment against the final centroids: exact f(C, P), final
     # cluster sizes and the degeneracy mask (counts are those of the *final*
@@ -83,6 +111,68 @@ def lloyd(
     ids, d = ops.assign(points, final.centroids, impl=impl)
     _, counts = ops.update(points, ids, k, weights=weights, impl=impl)
     f = jnp.sum(d * weights) if weights is not None else jnp.sum(d)
+    return KMeansResult(
+        centroids=final.centroids,
+        objective=f,
+        counts=counts,
+        degenerate=counts == 0,
+        iterations=final.it,
+        assignments=ids,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "tol", "impl"))
+def lloyd_batched(
+    points: jax.Array,
+    init_centroids: jax.Array,
+    *,
+    max_iters: int = 300,
+    tol: float = 1e-4,
+    impl: str = "auto",
+) -> KMeansResult:
+    """B concurrent Lloyd searches: ``points`` [B, s, n], ``init`` [B, k, n].
+
+    Every field of the result gains a leading batch axis.  Each stream stops
+    updating once its own tolerance test fires (masked no-op), so
+    ``iterations`` matches B independent :func:`lloyd` calls exactly; the
+    loop runs until the slowest stream converges.  One fused-kernel launch
+    advances all streams per iteration.
+    """
+    if points.dtype != jnp.bfloat16:
+        points = points.astype(jnp.float32)
+    init_centroids = init_centroids.astype(jnp.float32)
+    batch, k = init_centroids.shape[0], init_centroids.shape[1]
+    inf = jnp.full((batch,), jnp.inf, jnp.float32)
+
+    def step(c):
+        sums, counts, f = ops.fused_step_batched(points, c, impl=impl)
+        new_c = jnp.where(counts[..., None] > 0, sums / counts[..., None], c)
+        return new_c, f                          # [B, k, n], [B]
+
+    def body(s: _Carry):
+        return _advance(step, s, max_iters=max_iters, tol=tol,
+                        bcast=lambda a: a[:, None, None])
+
+    init = _Carry(init_centroids, inf, inf,
+                  jnp.zeros((batch,), jnp.int32),
+                  jnp.full((batch,), max_iters > 0))
+    final = jax.lax.while_loop(lambda s: jnp.any(s.active), body, init)
+
+    # Final per-stream evaluation (same two-pass epilogue as `lloyd`).  The
+    # epilogue stays on the jnp oracle (the Pallas kernels are not batched
+    # at this callsite), mapped per stream rather than vmapped so each
+    # stream's distance matrix stays cache-resident on CPU.
+    eff = ops.default_impl() if impl == "auto" else impl
+    if eff.startswith("pallas"):
+        eff = "ref"
+
+    def _finalize(xc):
+        x, c = xc
+        ids_b, d_b = ops.assign(x, c, impl=eff)
+        counts_b = ops.update(x, ids_b, k, impl=eff)[1]
+        return ids_b, jnp.sum(d_b), counts_b
+
+    ids, f, counts = jax.lax.map(_finalize, (points, final.centroids))
     return KMeansResult(
         centroids=final.centroids,
         objective=f,

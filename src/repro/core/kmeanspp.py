@@ -99,3 +99,27 @@ def kmeanspp(
 ):
     """Fresh K-means++ seeding of k centers (paper Algorithm 2)."""
     return seed(points, key, k, candidates=candidates, weights=weights)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "candidates"))
+def seed_batched(
+    points: jax.Array,
+    keys: jax.Array,
+    k: int,
+    *,
+    init: jax.Array,
+    degenerate: jax.Array,
+    candidates: int = 3,
+) -> jax.Array:
+    """Per-stream re-seeding for B concurrent chunk streams.
+
+    points [B, s, n], keys [B, ...], init [B, k, n], degenerate [B, k] ->
+    [B, k, n].  :func:`seed` is vmap-safe (gathers, ``fori_loop`` and
+    categorical sampling all batch), so this is one fused computation, not
+    B sequential seeding loops.
+    """
+
+    def one(p, kk, c0, deg):
+        return seed(p, kk, k, init=c0, degenerate=deg, candidates=candidates)
+
+    return jax.vmap(one)(points, keys, init, degenerate)

@@ -10,10 +10,19 @@ tile resident in VMEM:
     counts += colsum(onehot)
     obj    += sum(min_dist)
 
-halving the dominant HBM traffic of Big-means' inner loop.  Constraints
-(paper regime): k <= 128 (one lane tile), n <= 1024 (feature block fits
-VMEM).  ``ops.fused_step`` falls back to the two-pass path outside that
-envelope or when point weights are used.
+halving the dominant HBM traffic of Big-means' inner loop.
+
+Two variants:
+
+* :func:`fused_step_pallas` — single chunk, paper-regime envelope
+  (k <= 128: one lane tile; n <= 1024: feature block fits VMEM).
+* :func:`fused_step_batched_pallas` — a leading batch-grid dimension runs B
+  independent chunk streams in one launch, and the kernel tiles k (lane
+  tiles of 128 with a running argmin across tiles) and n (contraction
+  tiles) internally, widening the envelope to :func:`fits_batched`.
+
+``ops.fused_step`` / ``ops.fused_step_batched`` fall back to the two-pass
+path outside the envelope or when point weights are used.
 """
 from __future__ import annotations
 
@@ -27,6 +36,15 @@ _BIG = 1e30
 
 MAX_K = 128
 MAX_N = 1024
+
+# Batched-kernel envelope: k and n are tiled inside the kernel, so the wall
+# is VMEM working set (c + sums blocks), not the lane width.
+MAX_K_BATCHED = 1024
+MAX_N_BATCHED = 4096
+_MAX_KN_ELEMS = 1 << 20        # k_pad * n_pad <= 1M f32 (4 MB per block)
+
+_BLOCK_K = 128                 # lane tile for the running argmin
+_BLOCK_N = 512                 # contraction tile for the distance matmul
 
 
 def _fused_kernel(x_ref, c_ref, csq_ref, sums_ref, counts_ref, obj_ref, *,
@@ -73,6 +91,21 @@ def fits(k: int, n: int) -> bool:
     return k <= MAX_K and n <= MAX_N
 
 
+def _batched_tiles(k: int, n: int) -> tuple[int, int, int]:
+    """(k_pad, n_pad, block_n) used by the batched kernel for this shape."""
+    k_pad = -(-k // _BLOCK_K) * _BLOCK_K
+    n_pad = -(-n // 128) * 128
+    block_n = n_pad if n_pad <= _BLOCK_N else _BLOCK_N
+    n_pad = -(-n_pad // block_n) * block_n
+    return k_pad, n_pad, block_n
+
+
+def fits_batched(k: int, n: int) -> bool:
+    k_pad, n_pad, _ = _batched_tiles(k, n)
+    return (k <= MAX_K_BATCHED and n <= MAX_N_BATCHED
+            and k_pad * n_pad <= _MAX_KN_ELEMS)
+
+
 @functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
 def fused_step_pallas(
     x: jax.Array,
@@ -101,7 +134,7 @@ def fused_step_pallas(
         functools.partial(_fused_kernel, m=m, block_m=block_m),
         grid=(bm // block_m,),
         in_specs=[
-            pl.BlockSpec((block_m, n_pad), lambda i: (0, 0) if False else (i, 0)),
+            pl.BlockSpec((block_m, n_pad), lambda i: (i, 0)),
             pl.BlockSpec((k_pad, n_pad), lambda i: (0, 0)),
             pl.BlockSpec((1, k_pad), lambda i: (0, 0)),
         ],
@@ -118,3 +151,115 @@ def fused_step_pallas(
         interpret=interpret,
     )(xp, cp, csq)
     return sums[:k, :n], counts[0, :k], obj[0, 0]
+
+
+def _fused_batched_kernel(x_ref, c_ref, csq_ref, sums_ref, counts_ref,
+                          obj_ref, *, m: int, block_m: int, block_k: int,
+                          block_n: int):
+    """One (batch, point-tile) grid cell of the batched fused step.
+
+    k is processed in ``block_k`` lane tiles with a running (min, argmin)
+    carried across tiles; the distance matmul contracts n in ``block_n``
+    tiles.  Both loops are unrolled at trace time (tile counts are static).
+    """
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _zero():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        obj_ref[...] = jnp.zeros_like(obj_ref)
+
+    x = x_ref[0]                                             # [bm, n_pad]
+    c = c_ref[0]                                             # [k_pad, n_pad]
+    csq = csq_ref[0]                                         # [1, k_pad]
+    bm, n_pad = x.shape
+    k_pad = c.shape[0]
+    nk, nn = k_pad // block_k, n_pad // block_n
+
+    best = jnp.full((bm,), _BIG, jnp.float32)
+    bidx = jnp.zeros((bm,), jnp.int32)
+    for j in range(nk):
+        ct = c[j * block_k:(j + 1) * block_k]                # [bk, n_pad]
+        dots = jnp.zeros((bm, block_k), jnp.float32)
+        for t in range(nn):
+            sl = slice(t * block_n, (t + 1) * block_n)
+            dots += jax.lax.dot_general(
+                x[:, sl], ct[:, sl], (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        sc = csq[0:1, j * block_k:(j + 1) * block_k] - 2.0 * dots
+        tmin = jnp.min(sc, axis=1)
+        targ = jnp.argmin(sc, axis=1).astype(jnp.int32) + j * block_k
+        take = tmin < best
+        best = jnp.where(take, tmin, best)
+        bidx = jnp.where(take, targ, bidx)
+
+    xsq = jnp.sum(x * x, axis=1)
+    mind = jnp.maximum(best + xsq, 0.0)
+    rows = i * block_m + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+    valid = (rows < m).astype(jnp.float32)                   # [bm, 1]
+
+    for j in range(nk):
+        lanes = (jax.lax.broadcasted_iota(jnp.int32, (bm, block_k), 1)
+                 + j * block_k)
+        onehot = (bidx[:, None] == lanes).astype(jnp.float32) * valid
+        sums_ref[0, j * block_k:(j + 1) * block_k, :] += jax.lax.dot_general(
+            onehot, x, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        counts_ref[0, :, j * block_k:(j + 1) * block_k] += jnp.sum(
+            onehot, axis=0, keepdims=True)
+    obj_ref[...] += jnp.sum(
+        mind[:, None] * valid, keepdims=True)[0:1, 0:1].reshape(1, 1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def fused_step_batched_pallas(
+    x: jax.Array,
+    c: jax.Array,
+    *,
+    block_m: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x [B,m,n], c [B,k,n] -> (sums [B,k,n], counts [B,k], obj [B]).
+
+    One ``pallas_call`` computes the per-chunk Lloyd statistics of all B
+    streams: grid (B, m-tiles), with the batch as the outer grid dimension
+    so each stream's accumulators are zeroed once and revisited in order.
+    """
+    batch, m, n = x.shape
+    k = c.shape[1]
+    assert fits_batched(k, n), (k, n)
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+
+    block_m = min(block_m, max(8, m))
+    bm = -(-m // block_m) * block_m
+    block_k = _BLOCK_K
+    k_pad, n_pad, block_n = _batched_tiles(k, n)
+
+    xp = _pad_to(_pad_to(x, bm, 1), n_pad, 2)
+    cp = _pad_to(_pad_to(c, k_pad, 1), n_pad, 2)
+    csq = _pad_to(jnp.sum(c * c, axis=-1)[:, None, :], k_pad, 2, value=_BIG)
+
+    sums, counts, obj = pl.pallas_call(
+        functools.partial(_fused_batched_kernel, m=m, block_m=block_m,
+                          block_k=block_k, block_n=block_n),
+        grid=(batch, bm // block_m),
+        in_specs=[
+            pl.BlockSpec((1, block_m, n_pad), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, k_pad, n_pad), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, 1, k_pad), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k_pad, n_pad), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, 1, k_pad), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, i: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, k_pad, n_pad), jnp.float32),
+            jax.ShapeDtypeStruct((batch, 1, k_pad), jnp.float32),
+            jax.ShapeDtypeStruct((batch, 1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, cp, csq)
+    return sums[:, :k, :n], counts[:, 0, :k], obj[:, 0, 0]

@@ -7,7 +7,25 @@ slice); multi-pod: 2 pods x 256 = 512 chips with a leading "pod" axis.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:
+    from jax.sharding import AxisType
+
+    def _axis_kwargs(n_axes: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n_axes}
+except ImportError:     # jax < 0.6: axes are implicitly Auto
+
+    def _axis_kwargs(n_axes: int) -> dict:
+        return {}
+
+
+def make_mesh(shape, axes, devices=None):
+    """`jax.make_mesh` with Auto axis types where the API supports them —
+    the portable entry point for tests and benchmark subprocesses."""
+    kwargs = _axis_kwargs(len(axes))
+    if devices is not None:
+        kwargs["devices"] = devices
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,11 +41,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             "importing jax (dryrun.py does this)."
         )
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(AxisType.Auto,) * len(axes),
-        devices=devices[:n],
-    )
+    return make_mesh(shape, axes, devices=devices[:n])
 
 
 def make_host_mesh(shape=None, axes=("data", "model")):
@@ -35,5 +49,4 @@ def make_host_mesh(shape=None, axes=("data", "model")):
     n = len(jax.devices())
     if shape is None:
         shape = (n, 1)
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

@@ -40,11 +40,12 @@ def main() -> None:
     rcfg = runner.RunnerConfig(
         k=cfg.k, s=cfg.s, n_chunks=args.chunks,
         max_iters=cfg.max_iters, tol=cfg.tol, candidates=cfg.candidates,
+        batch=getattr(cfg, "batch", 1), prefetch=getattr(cfg, "prefetch", 2),
         time_budget_s=args.time_budget, ckpt_dir=args.ckpt,
         seed=args.seed)
 
     print(f"[train] {args.arch}: m={m} n={cfg.n_features} k={cfg.k} "
-          f"s={cfg.s} chunks={args.chunks}")
+          f"s={cfg.s} chunks={args.chunks} batch={rcfg.batch}")
     state, metrics = runner.run(
         lambda cid: np.asarray(gmm_chunk(spec, cid, cfg.s)), rcfg,
         n_features=cfg.n_features)

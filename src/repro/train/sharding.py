@@ -68,13 +68,22 @@ def _axis_prod(mesh: Mesh, axes) -> int:
 def spec(mesh: Mesh, *logical, shape: tuple | None = None) -> P:
     """PartitionSpec for logical axes; with ``shape`` given, any dim not
     divisible by its mesh-axis product falls back to replicated (e.g. 5 KV
-    heads on a 16-way model axis, or a vocab not divisible by 16)."""
+    heads on a 16-way model axis, or a vocab not divisible by 16).
+
+    Singleton physical-axis tuples are normalized to the bare axis name:
+    ``P("model", "data")`` and ``P(("model",), ("data",))`` shard
+    identically but do not compare equal, and the scalar form is the
+    conventional spelling.
+    """
     phys = [physical_axes(mesh, a) for a in logical]
     if shape is not None:
         phys = [
             p if p is None or s % _axis_prod(mesh, p) == 0 else None
             for p, s in zip(phys, shape)
         ]
+    phys = [
+        p[0] if isinstance(p, tuple) and len(p) == 1 else p for p in phys
+    ]
     return P(*phys)
 
 

@@ -30,6 +30,7 @@ def make_batch(cfg):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", LM_ARCHS)
 def test_forward_and_train_step(arch):
     cfg = get_config(arch).reduced()

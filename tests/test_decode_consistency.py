@@ -10,6 +10,9 @@ import pytest
 from repro.models import transformer as T
 from repro.models.registry import get_config, model_fns
 
+# Full-model prefill/decode replays: the slowest block of the suite.
+pytestmark = pytest.mark.slow
+
 B, S, S0 = 2, 32, 24
 KEY = jax.random.PRNGKey(1)
 

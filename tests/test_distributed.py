@@ -13,13 +13,13 @@ _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
+import numpy as np
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
-from repro.core import big_means, big_means_sharded, full_objective
+from repro.core import big_means, big_means_batched, big_means_sharded, full_objective
 from repro.data.synthetic import GMMSpec, gmm_dataset
+from repro.launch.mesh import make_mesh
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 X = gmm_dataset(GMMSpec(m=16000, n=8, components=5, seed=2))
 key = jax.random.PRNGKey(0)
 
@@ -40,6 +40,18 @@ out["f_allworkers"] = float(full_objective(X, st2.centroids)) / X.shape[0]
 # sequential reference
 st3, _ = big_means(X, key, k=5, s=800, n_chunks=24)
 out["f_seq"] = float(full_objective(X, st3.centroids)) / X.shape[0]
+
+# stream-mesh batched driver: sharding the stream axis over devices must
+# reproduce the single-device batched result exactly (same key schedule)
+smesh = make_mesh((4,), ("streams",))
+stb, _ = big_means_batched(X, key, k=5, s=800, batch=8, rounds=3, impl="ref")
+stm, _ = big_means_batched(X, key, k=5, s=800, batch=8, rounds=3, impl="ref",
+                           mesh=smesh)
+out["batched_mesh_matches"] = bool(
+    np.allclose(float(stb.f_best), float(stm.f_best), rtol=1e-5)
+    and np.allclose(np.asarray(stb.centroids), np.asarray(stm.centroids),
+                    rtol=1e-4, atol=1e-4)
+    and int(stb.n_accepted) == int(stm.n_accepted))
 print("RESULT " + json.dumps(out))
 """
 
@@ -63,3 +75,7 @@ def test_sharded_progress(result):
     assert result["accepted"] >= 1
     # per-worker chunk traces concatenated over the 4 data-axis workers
     assert result["n_infos"] == 4 * 6
+
+
+def test_batched_stream_mesh_matches_local(result):
+    assert result["batched_mesh_matches"]

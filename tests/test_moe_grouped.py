@@ -19,6 +19,7 @@ def _reset_flags():
     flags.MOE_GROUPED_DISPATCH = 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["deepseek-moe-16b", "qwen3-moe-235b-a22b"])
 def test_grouped_equals_global_at_full_capacity(arch):
     cfg = get_config(arch).reduced()
@@ -36,6 +37,7 @@ def test_grouped_equals_global_at_full_capacity(arch):
     assert abs(base - grouped) < 1e-6
 
 
+@pytest.mark.slow
 def test_grouped_gradients_finite():
     cfg = get_config("deepseek-moe-16b").reduced()
     mod = model_fns(cfg)

@@ -55,6 +55,7 @@ def test_runner_straggler_budget():
     assert m.chunks_done == 3
 
 
+@pytest.mark.slow
 def test_runner_time_budget():
     cfg = runner.RunnerConfig(k=5, s=1024, n_chunks=10**6,
                               time_budget_s=2.0, seed=5)
@@ -104,6 +105,7 @@ def test_warmup_cosine_schedule():
     assert float(sched(jnp.int32(100))) < 1e-3
 
 
+@pytest.mark.slow
 def test_runner_vns_ladder():
     """Beyond-paper: VNS chunk-size shaking (the paper's §6 future work).
     Stalls escalate to smaller chunks; acceptances reset; quality is not

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import big_means, full_assignment, full_objective
 from repro.core.baselines import forgy_kmeans
@@ -23,6 +24,7 @@ def test_bigmeans_recovers_gmm_structure():
     assert f_per_point < 1.5 * spec.n          # ~n for a perfect fit
 
 
+@pytest.mark.slow
 def test_bigmeans_improves_with_more_chunks():
     X = gmm_dataset(GMMSpec(m=30000, n=10, components=12, spread=3.0, seed=5))
     key = jax.random.PRNGKey(1)
@@ -33,6 +35,7 @@ def test_bigmeans_improves_with_more_chunks():
     assert f_many <= f_few * 1.001             # more data -> no worse (§2.2 p3)
 
 
+@pytest.mark.slow
 def test_bigmeans_beats_forgy_on_hard_instance():
     """Forgy K-means is prone to bad local minima on many-component data;
     the decomposition's natural shaking escapes them (paper Tables 3-4)."""
