@@ -67,35 +67,36 @@ def _measure(run, rounds, chunks, reps):
 
 
 def bench(total_chunks: int, reps: int, max_iters: int):
-    from repro.core import big_means_batched
-    from repro.data.synthetic import GMMSpec, gmm_dataset
+    from repro.api import BigMeansConfig, fit, synthetic
     from repro.launch.mesh import make_mesh
 
-    X = gmm_dataset(GMMSpec(m=200_000, n=N, components=K, seed=12))
+    X = synthetic.gmm_dataset(
+        synthetic.GMMSpec(m=200_000, n=N, components=K, seed=12))
     key = jax.random.PRNGKey(0)
     ndev = len(jax.devices())
     rows = []
 
     def variant(batch, mesh, label):
         rounds = max(2, total_chunks // batch)
+        cfg = BigMeansConfig(
+            k=K, s=S, batch=batch, n_chunks=rounds * batch,
+            max_iters=max_iters, impl="ref", mesh=mesh)
 
         def run(r):
-            st, _ = big_means_batched(
-                X, key, k=K, s=S, batch=batch, rounds=r,
-                max_iters=max_iters, impl="ref", mesh=mesh)
-            st.f_best.block_until_ready()
-            return st
+            res = fit(X, cfg, method="batched", key=key,
+                      n_chunks=r * batch)
+            return res
 
-        dt, cps, st = _measure(run, rounds, rounds * batch, reps)
+        dt, cps, res = _measure(run, rounds, rounds * batch, reps)
         rows.append({
             "variant": label, "batch": batch, "rounds": rounds,
             "chunks": rounds * batch, "k": K, "n": N, "s": S, "impl": "ref",
             "wall_s": round(dt, 3), "chunks_per_s": round(cps, 2),
-            "f_best": float(st.f_best),
+            "f_best": res.objective,
         })
         print(f"{label:16s} batch={batch:<3d} rounds={rounds:<4d} "
               f"wall={dt:6.2f}s  chunks/s={cps:7.2f}  "
-              f"f_best={float(st.f_best):.4e}", flush=True)
+              f"f_best={res.objective:.4e}", flush=True)
 
     for batch in BATCHES:
         variant(batch, None, "local")

@@ -1,58 +1,62 @@
-"""End-to-end driver: out-of-core Big-means with checkpoints and restart.
+"""End-to-end driver: out-of-core Big-means with checkpoints and restart,
+entirely through `repro.api`.
 
 Streams a virtual 8M x 28 dataset (HEPMASS-scale surrogate) through the
-production runner for a few hundred chunks, checkpoints along the way,
+streaming strategy for a few hundred chunks, checkpoints along the way,
 simulates a crash + restart, and finishes with the full assignment pass.
 
     PYTHONPATH=src python examples/bigdata_clustering.py [--chunks 300]
 """
 import argparse
 import os
+import shutil
 import tempfile
 
-import jax
 import numpy as np
 
-from repro.cluster import runner
-from repro.core import full_assignment
-from repro.data.synthetic import GMMSpec, gmm_chunk
+from repro.api import BigMeansConfig, evaluate, fit, synthetic
 
-SPEC = GMMSpec(m=8_000_000, n=28, components=25, spread=4.0, seed=17)
-S = 8192                     # chunk size
-
-
-def provider(chunk_id: int) -> np.ndarray:
-    """Fetch one uniform chunk of the virtual dataset (never materialized)."""
-    return np.asarray(gmm_chunk(SPEC, chunk_id, S))
+SPEC = synthetic.GMMSpec(m=8_000_000, n=28, components=25, spread=4.0, seed=17)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--chunks", type=int, default=300)
     ap.add_argument("--k", type=int, default=25)
+    ap.add_argument("--s", type=int, default=8192, help="chunk size")
     args = ap.parse_args()
 
+    def provider(chunk_id: int) -> np.ndarray:
+        """Fetch one chunk of the virtual dataset (never materialized)."""
+        return np.asarray(synthetic.gmm_chunk(SPEC, chunk_id, args.s))
+
     ckpt = os.path.join(tempfile.gettempdir(), "bigmeans_demo_ckpt")
-    cfg = runner.RunnerConfig(
-        k=args.k, s=S, n_chunks=args.chunks,
+    shutil.rmtree(ckpt, ignore_errors=True)      # deterministic demo reruns
+    cfg = BigMeansConfig(
+        k=args.k, s=args.s, n_chunks=args.chunks,
         ckpt_dir=ckpt, ckpt_every=50, log_every=25, seed=0)
 
     print(f"phase 1: clustering {args.chunks // 2} chunks, then 'crashing'…")
-    cfg1 = runner.RunnerConfig(**{**cfg.__dict__, "n_chunks": args.chunks // 2})
-    state, m = runner.run(provider, cfg1, n_features=SPEC.n)
-    print(f"  f_best={m.f_best:.5e}  accepted={m.accepted}  "
-          f"wall={m.wall_time_s:.1f}s")
+    r1 = fit(provider, cfg.replace(n_chunks=args.chunks // 2, resume=False),
+             method="streaming", n_features=SPEC.n)
+    print(f"  f_best={r1.objective:.5e}  accepted={r1.n_accepted}  "
+          f"wall={r1.wall_time_s:.1f}s")
 
     print("phase 2: restart from checkpoint, finish the budget…")
-    state, m = runner.run(provider, cfg, n_features=SPEC.n, resume=True)
-    print(f"  f_best={m.f_best:.5e}  accepted={m.accepted}  "
-          f"chunks_done={m.chunks_done} (resumed)  wall={m.wall_time_s:.1f}s")
-    for cid, fb, fn in m.trace:
-        print(f"    chunk {cid:4d}: incumbent {fb:.5e}  candidate {fn:.5e}")
+    r2 = fit(provider, cfg, method="streaming", n_features=SPEC.n)
+    print(f"  f_best={r2.objective:.5e}  accepted={r2.n_accepted}  "
+          f"chunks_done={r2.n_chunks} (resumed)  wall={r2.wall_time_s:.1f}s")
+    for entry in r2.trace:
+        if entry[0] == "fetch_error":
+            print(f"    chunk {entry[1]:4d}: FETCH FAILED {entry[2]}")
+        else:
+            cid, fb, fn = entry
+            print(f"    chunk {cid:4d}: incumbent {fb:.5e}  candidate {fn:.5e}")
 
     print("final pass: assigning a 1M-point sample to the centroids…")
-    sample = np.concatenate([provider(10_000 + i) for i in range(128)])
-    ids, f = full_assignment(jax.numpy.asarray(sample), state.centroids)
+    n_sample = max(1, 1_000_000 // args.s)
+    sample = np.concatenate([provider(10_000 + i) for i in range(n_sample)])
+    ids, f = evaluate(r2, sample)
     sizes = np.bincount(np.asarray(ids), minlength=args.k)
     print(f"  f(C, sample)/point = {float(f) / len(sample):.4f}")
     print(f"  cluster sizes: min={sizes.min()} median={int(np.median(sizes))} "

@@ -12,7 +12,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro.core import big_means, full_objective
+from repro.api import evaluate, fit
 from repro.models import transformer as T
 from repro.models.registry import get_config, model_fns
 
@@ -45,9 +45,10 @@ def main():
     print(f"{args.arch}: clustering {H.shape[0]} activation vectors "
           f"({H.shape[1]}-d) into a {args.codebook}-entry codebook")
 
-    state, _ = big_means(H, key, k=args.codebook,
-                         s=min(512, H.shape[0]), n_chunks=25)
-    mse = float(full_objective(H, state.centroids)) / H.size
+    result = fit(H, key=key, k=args.codebook,
+                 s=min(512, H.shape[0]), n_chunks=25)
+    _, f = evaluate(result, H)
+    mse = f / H.size
     var = float(jnp.var(H))
     print(f"codebook quantization MSE/dim = {mse:.5f} "
           f"(activation variance {var:.5f}, "

@@ -1,32 +1,40 @@
-"""Quickstart: cluster a synthetic big-data stream with Big-means.
+"""Quickstart: cluster a synthetic big-data stream through `repro.api`.
 
-    PYTHONPATH=src python examples/quickstart.py
+One config, one ``fit()``: the execution strategy is a knob, and the paper's
+§5 competitors answer through the same interface.
+
+    PYTHONPATH=src python examples/quickstart.py [--m 200000] [--chunks 40]
 """
-import jax
+import argparse
 
-from repro.core import big_means, full_assignment, full_objective, kmeanspp, lloyd
-from repro.data.synthetic import GMMSpec, gmm_dataset
+from repro.api import BigMeansConfig, evaluate, fit, synthetic
 
 
 def main():
-    # 200k points, 16 features, 12 latent components
-    X = gmm_dataset(GMMSpec(m=200_000, n=16, components=12, seed=0))
-    k, s = 12, 4000
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=200_000, help="dataset rows")
+    ap.add_argument("--chunks", type=int, default=40, help="chunk budget")
+    args = ap.parse_args()
 
-    print(f"dataset: {X.shape},  k={k},  chunk size s={s}")
-    state, infos = big_means(X, jax.random.PRNGKey(0), k=k, s=s, n_chunks=40)
-    print(f"chunks processed: 40, accepted improvements: {int(state.n_accepted)}")
-    print(f"distance evaluations: {float(state.n_dist_evals):.3e} "
-          f"(full K-means needs ~{2.0 * X.shape[0] * k * 20:.3e} per run)")
+    # synthetic stream: args.m points, 16 features, 12 latent components
+    X = synthetic.gmm_dataset(
+        synthetic.GMMSpec(m=args.m, n=16, components=12, seed=0))
+    cfg = BigMeansConfig(k=12, s=min(4000, args.m // 4), n_chunks=args.chunks)
+    print(f"dataset: {X.shape},  k={cfg.k},  chunk size s={cfg.s}")
 
-    ids, f = full_assignment(X, state.centroids)
-    print(f"Big-means   f(C, X) = {float(f):.6e}")
+    result = fit(X, cfg)                     # 'auto' picks the strategy
+    print(f"strategy: {result.strategy},  chunks: {result.n_chunks}, "
+          f"accepted improvements: {result.n_accepted}")
+    print(f"distance evaluations: {result.n_dist_evals:.3e} "
+          f"(full K-means needs ~{2.0 * X.shape[0] * cfg.k * 20:.3e} per run)")
 
-    # reference: K-means++ + Lloyd on the FULL dataset
-    c0 = kmeanspp(X, jax.random.PRNGKey(1), k)
-    res = lloyd(X, c0)
-    print(f"full K-means f(C, X) = {float(res.objective):.6e} "
-          f"({int(res.iterations)} Lloyd iterations over all {X.shape[0]} points)")
+    _, f = evaluate(result, X)
+    print(f"Big-means    f(C, X) = {f:.6e}")
+
+    # reference: multi-start K-means++ on the FULL dataset, same fit() call
+    ref = fit(X, cfg, method="kmeanspp", seed=1)
+    print(f"K-means++    f(C, X) = {ref.objective:.6e} "
+          f"({ref.n_iterations} Lloyd iterations over all {X.shape[0]} points)")
 
 
 if __name__ == "__main__":

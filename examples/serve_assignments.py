@@ -14,25 +14,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cluster import checkpoint, runner
-from repro.data.synthetic import GMMSpec, gmm_chunk
+from repro.api import BigMeansConfig, fit, synthetic
+from repro.cluster import checkpoint
+from repro.core import bigmeans
 from repro.kernels import ops
 
-SPEC = GMMSpec(m=1_000_000, n=12, components=10, seed=5)
+SPEC = synthetic.GMMSpec(m=1_000_000, n=12, components=10, seed=5)
 
 
 def main():
-    # "train": quick clustering run, checkpointed
+    # "train": quick clustering run through the facade, checkpointed
     ckpt = os.path.join(tempfile.gettempdir(), "bigmeans_serve_ckpt")
-    cfg = runner.RunnerConfig(k=10, s=4096, n_chunks=40, ckpt_dir=ckpt,
-                              ckpt_every=20, seed=0)
-    state, _ = runner.run(
-        lambda cid: np.asarray(gmm_chunk(SPEC, cid, 4096)), cfg,
-        n_features=SPEC.n, resume=False)
+    cfg = BigMeansConfig(k=10, s=4096, n_chunks=40, ckpt_dir=ckpt,
+                         ckpt_every=20, seed=0, resume=False)
+    result = fit(lambda cid: np.asarray(synthetic.gmm_chunk(SPEC, cid, 4096)),
+                 cfg, method="streaming", n_features=SPEC.n)
+    print(f"trained: {result.summary()}")
 
     # "serve": load centroids from the checkpoint, answer batched requests
     (restored, _key), step = checkpoint.restore(
-        ckpt, (state, jax.random.PRNGKey(0)))
+        ckpt, (bigmeans.init_state(cfg.k, SPEC.n), jax.random.PRNGKey(0)))
     centroids = restored.centroids
     print(f"serving centroids from checkpoint step {step}")
 
@@ -40,7 +41,7 @@ def main():
     latencies = []
     for req in range(20):
         batch = jnp.asarray(np.asarray(
-            gmm_chunk(SPEC, 50_000 + req, 256)))          # client batch
+            synthetic.gmm_chunk(SPEC, 50_000 + req, 256)))   # client batch
         t0 = time.monotonic()
         ids = assign(batch)
         ids.block_until_ready()

@@ -1,0 +1,149 @@
+"""`repro.api` — the single public entry point for Big-means clustering.
+
+One config (:class:`BigMeansConfig`), one :func:`fit`, pluggable data
+sources and driver strategies::
+
+    from repro.api import fit
+
+    result = fit(X, k=25, s=16384, n_chunks=100)          # auto strategy
+    result = fit(X, cfg, method="batched")                # explicit strategy
+    result = fit("data.npy", cfg, method="streaming")     # out-of-core
+    result = fit(X, cfg, method="kmeanspp")               # §5 baseline
+
+Every call returns a :class:`FitResult` — Big-means strategies and §5
+baselines alike — so algorithms are compared through one interface.  The
+low-level drivers (``repro.core.bigmeans``, ``repro.cluster.runner``) stay
+importable, but documented usage goes through this facade.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.api import baselines as baselines
+from repro.api import sources as sources
+from repro.api import strategies as strategies
+from repro.api.baselines import get_baseline, list_baselines, register_baseline
+from repro.api.config import BigMeansConfig
+from repro.api.result import FitResult
+from repro.api.sources import (
+    ArraySource,
+    DataSource,
+    IteratorSource,
+    MemmapSource,
+    ProviderSource,
+    as_source,
+)
+from repro.api.strategies import (
+    get_strategy,
+    list_strategies,
+    register_strategy,
+    resolve_auto,
+)
+from repro.cluster.runner import EndOfStream
+
+# Synthetic-data helpers re-exported so examples and smoke tests can run off
+# `repro.api` imports alone.
+from repro.data import synthetic as synthetic
+
+__all__ = [
+    "ArraySource",
+    "BigMeansConfig",
+    "DataSource",
+    "EndOfStream",
+    "FitResult",
+    "IteratorSource",
+    "MemmapSource",
+    "ProviderSource",
+    "as_source",
+    "baselines",
+    "evaluate",
+    "fit",
+    "get_baseline",
+    "get_strategy",
+    "list_baselines",
+    "list_methods",
+    "list_strategies",
+    "register_baseline",
+    "register_strategy",
+    "resolve_auto",
+    "sources",
+    "strategies",
+    "synthetic",
+]
+
+
+def list_methods() -> list[str]:
+    """Everything :func:`fit` accepts as ``method``."""
+    return ["auto"] + list_strategies() + list_baselines()
+
+
+def _resolve_method(method: str):
+    if method == "auto" or method in list_strategies():
+        return get_strategy(method)
+    if method in list_baselines():
+        return get_baseline(method)
+    raise KeyError(f"unknown method {method!r}; known: {list_methods()}")
+
+
+def fit(
+    data,
+    config: BigMeansConfig | None = None,
+    *,
+    method: str = "auto",
+    key: jax.Array | None = None,
+    n_features: int | None = None,
+    **overrides,
+) -> FitResult:
+    """Cluster ``data`` and return a :class:`FitResult`.
+
+    * ``data`` — anything :func:`as_source` accepts: a 2-D array, an
+      ``.npy`` path, a ``provider(chunk_id)`` callable, a chunk iterator,
+      or a :class:`DataSource`.
+    * ``config`` — a :class:`BigMeansConfig`; ``overrides`` are applied on
+      top (or, with no config, must include at least ``k`` and ``s``).
+    * ``method`` — a strategy (``auto`` / ``sequential`` / ``batched`` /
+      ``sharded`` / ``streaming``) or a §5 baseline (see
+      :func:`list_methods`).
+    * ``key`` — PRNG key; defaults to ``PRNGKey(config.seed)``.
+    * ``n_features`` — feature count, only needed for provider/iterator
+      data whose first chunk should not be probed eagerly.
+
+    ``wall_time_s`` on the result covers the whole call, compile included.
+    """
+    if config is None:
+        missing = {"k", "s"} - set(overrides)
+        if missing:
+            raise TypeError(
+                f"fit() without a config needs {sorted(missing)} "
+                "(e.g. fit(X, k=25, s=16384))")
+        cfg = BigMeansConfig(**overrides)
+    else:
+        cfg = config.replace(**overrides) if overrides else config
+
+    source = as_source(data, n_features=n_features)
+    fn = _resolve_method(method)
+    if key is None:
+        key = jax.random.PRNGKey(cfg.seed)
+
+    t0 = time.monotonic()
+    result = fn(cfg, source, key)
+    jax.block_until_ready(result.centroids)
+    result.wall_time_s = time.monotonic() - t0
+    return result
+
+
+def evaluate(result_or_centroids, data) -> tuple[jax.Array, float]:
+    """Full-data evaluation: ``(assignments [m], objective f(C, X))``.
+
+    The like-for-like comparison across methods whose native ``objective``
+    fields have different scopes (chunk, coreset, full data).
+    """
+    from repro.core.objective import full_assignment
+
+    centroids = getattr(result_or_centroids, "centroids", result_or_centroids)
+    X = as_source(data).as_array()
+    ids, f = full_assignment(jax.numpy.asarray(X, dtype=jax.numpy.float32),
+                             jax.numpy.asarray(centroids))
+    return ids, float(f)

@@ -1,0 +1,150 @@
+"""Baseline registry: the paper's §5 competitors behind the same `fit()`.
+
+Each entry is a ``fn(config, source, key) -> FitResult`` wrapper over the
+implementations in ``repro.core.baselines``, so ``benchmarks/`` and
+``examples/`` compare Big-means against its competitors through one
+interface instead of six calling conventions.
+
+Baselines are full-data (in-core) algorithms; their ``objective`` is
+f(C, X) over the data they actually clustered (the coreset baseline reports
+the weighted coreset objective — evaluate on X for a like-for-like number).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.api.config import BigMeansConfig
+from repro.api.result import FitResult
+from repro.api.sources import DataSource
+
+BaselineFn = Callable[[BigMeansConfig, DataSource, jax.Array], FitResult]
+
+_BASELINES: dict[str, BaselineFn] = {}
+
+
+def register_baseline(name: str):
+    """Decorator: register ``fn(config, source, key) -> FitResult``."""
+    def deco(fn: BaselineFn) -> BaselineFn:
+        _BASELINES[name] = fn
+        return fn
+    return deco
+
+
+def get_baseline(name: str) -> BaselineFn:
+    try:
+        return _BASELINES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown baseline {name!r}; known: {list_baselines()}") from None
+
+
+def list_baselines() -> list[str]:
+    return sorted(_BASELINES)
+
+
+def _array(source: DataSource, name: str):
+    if not source.in_core:
+        raise TypeError(
+            f"baseline {name!r} is a full-data algorithm and needs in-core "
+            f"data; {type(source).__name__} cannot be materialized")
+    return source.as_array()
+
+
+def _from_kmeans_result(res, name: str, cfg: BigMeansConfig) -> FitResult:
+    return FitResult(
+        centroids=res.centroids,
+        objective=float(res.objective),
+        algorithm=name,
+        strategy=None,
+        n_chunks=0,
+        n_accepted=0,
+        n_iterations=int(np.asarray(res.iterations).sum()),
+        n_dist_evals=math.nan,
+        config=cfg,
+        extras={"counts": np.asarray(res.counts)},
+    )
+
+
+@register_baseline("forgy")
+def _fit_forgy(cfg, source, key):
+    from repro.core.baselines import forgy_kmeans
+
+    X = _array(source, "forgy")
+    res = forgy_kmeans(X, key, k=cfg.k, max_iters=cfg.max_iters, tol=cfg.tol,
+                       impl=cfg.impl)
+    return _from_kmeans_result(res, "forgy", cfg)
+
+
+@register_baseline("kmeanspp")
+def _fit_kmeanspp(cfg, source, key):
+    """Multi-start K-means++ (the paper's "K-means++" competitor column)."""
+    from repro.core.baselines import multistart_kmeans
+
+    X = _array(source, "kmeanspp")
+    res = multistart_kmeans(
+        X, key, k=cfg.k, n_init=3, init="kmeans++",
+        candidates=cfg.candidates, max_iters=cfg.max_iters, tol=cfg.tol,
+        impl=cfg.impl)
+    return _from_kmeans_result(res, "kmeanspp", cfg)
+
+
+@register_baseline("kmeans_parallel")
+def _fit_kmeans_parallel(cfg, source, key):
+    from repro.core.baselines import kmeans_parallel
+
+    X = _array(source, "kmeans_parallel")
+    res = kmeans_parallel(X, key, k=cfg.k, max_iters=cfg.max_iters,
+                          tol=cfg.tol, impl=cfg.impl)
+    return _from_kmeans_result(res, "kmeans_parallel", cfg)
+
+
+@register_baseline("coreset")
+def _fit_coreset(cfg, source, key):
+    from repro.core.baselines import lightweight_coreset_kmeans
+
+    X = _array(source, "coreset")
+    res = lightweight_coreset_kmeans(
+        X, key, k=cfg.k, s=cfg.s, candidates=cfg.candidates,
+        max_iters=cfg.max_iters, tol=cfg.tol, impl=cfg.impl)
+    out = _from_kmeans_result(res, "coreset", cfg)
+    out.extras["objective_scope"] = "weighted coreset"
+    return out
+
+
+@register_baseline("da_mssc")
+def _fit_da_mssc(cfg, source, key):
+    from repro.core.baselines import da_mssc
+
+    X = _array(source, "da_mssc")
+    m = X.shape[0]
+    q = max(1, min(cfg.n_chunks, m // cfg.s))
+    res = da_mssc(X, key, k=cfg.k, s=cfg.s, q=q, candidates=cfg.candidates,
+                  max_iters=cfg.max_iters, tol=cfg.tol, impl=cfg.impl)
+    out = _from_kmeans_result(res, "da_mssc", cfg)
+    out.n_chunks = q
+    return out
+
+
+@register_baseline("ward")
+def _fit_ward(cfg, source, key):
+    from repro.core.baselines import ward
+    from repro.core.objective import full_objective
+
+    X = _array(source, "ward")
+    centroids, labels = ward(np.asarray(X), cfg.k)
+    centroids = np.asarray(centroids, dtype=np.float32)
+    f = float(full_objective(jax.numpy.asarray(X, dtype=jax.numpy.float32),
+                             jax.numpy.asarray(centroids)))
+    return FitResult(
+        centroids=centroids,
+        objective=f,
+        algorithm="ward",
+        strategy=None,
+        n_dist_evals=math.nan,
+        config=cfg,
+        extras={"labels": np.asarray(labels)},
+    )

@@ -1,0 +1,147 @@
+"""`BigMeansConfig` — the single source of truth for every algorithm knob.
+
+Historically the knobs were scattered across three surfaces that silently
+drifted apart: the ``big_means*`` driver kwargs, the host runner's
+``RunnerConfig``, and the dry-runnable ``BigMeansWorkload`` in
+``configs/bigmeans_paper.py``.  This dataclass unifies them; the old
+constructors survive as deprecation shims that build one of these.
+
+A config is *strategy-agnostic*: the same instance drives the sequential,
+batched, sharded and streaming strategies (each strategy reads the fields it
+needs and validates the combinations it cares about — e.g. only the batched
+strategy requires ``batch`` to divide ``n_chunks``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class BigMeansConfig:
+    """Validated configuration for one Big-means fit.
+
+    Core algorithm (paper Algorithm 3):
+
+    * ``k`` — number of clusters.
+    * ``s`` — chunk (sample) size; must be >= ``k``.
+    * ``n_chunks`` — total chunk budget across all streams/workers.
+    * ``max_iters`` / ``tol`` — per-chunk Lloyd stop condition (§5.7 rule).
+    * ``candidates`` — K-means++ candidates per degenerate slot.
+    * ``impl`` — kernel implementation ('auto' resolves via
+      :func:`repro.kernels.ops.resolve_impl`).
+    * ``with_replacement`` — chunk sampling scheme.
+
+    Parallel execution:
+
+    * ``batch`` — concurrent incumbent streams per device (batched driver /
+      batched host runner).
+    * ``sync_every`` — rounds between incumbent exchanges (1 = collective,
+      ``n_chunks`` = competitive).
+    * ``mesh`` / ``mesh_axes`` / ``stream_axis`` — optional device mesh for
+      the sharded / stream-mesh drivers.
+
+    Streaming runner (out-of-core data):
+
+    * ``prefetch`` — chunk-queue depth (0 = synchronous fetch).
+    * ``time_budget_s`` — the paper's cpu_max wall-clock stop.
+    * ``ckpt_dir`` / ``ckpt_every`` / ``resume`` — checkpointing.
+    * ``log_every`` — trace granularity.
+    * ``vns_ladder`` / ``vns_patience`` — chunk-size VNS extension (§6).
+    """
+
+    k: int
+    s: int
+    n_chunks: int = 100
+    max_iters: int = 300
+    tol: float = 1e-4
+    candidates: int = 3
+    impl: str = "auto"
+    with_replacement: bool = True
+    # --- parallel execution
+    batch: int = 1
+    sync_every: int = 1
+    mesh: Any = None
+    mesh_axes: tuple = ("data",)
+    stream_axis: str = "streams"
+    # --- streaming runner
+    prefetch: int = 2
+    time_budget_s: float | None = None
+    ckpt_dir: str | None = None
+    ckpt_every: int = 100
+    resume: bool = True
+    log_every: int = 50
+    seed: int = 0
+    vns_ladder: tuple = ()
+    vns_patience: int = 10
+
+    def __post_init__(self):
+        def _positive(name, value):
+            if not isinstance(value, int) or isinstance(value, bool) or value < 1:
+                raise ValueError(f"{name} must be a positive int, got {value!r}")
+
+        _positive("k", self.k)
+        _positive("s", self.s)
+        _positive("n_chunks", self.n_chunks)
+        _positive("max_iters", self.max_iters)
+        _positive("candidates", self.candidates)
+        _positive("batch", self.batch)
+        _positive("sync_every", self.sync_every)
+        _positive("ckpt_every", self.ckpt_every)
+        _positive("vns_patience", self.vns_patience)
+        if self.s < self.k:
+            raise ValueError(
+                f"chunk size s={self.s} must be >= k={self.k}: K-means++ "
+                "cannot seed k centers from fewer than k points")
+        if self.tol < 0:
+            raise ValueError(f"tol must be >= 0, got {self.tol!r}")
+        if self.prefetch < 0:
+            raise ValueError(f"prefetch must be >= 0, got {self.prefetch!r}")
+        if self.log_every < 0:
+            raise ValueError(f"log_every must be >= 0, got {self.log_every!r}")
+        if self.time_budget_s is not None and self.time_budget_s <= 0:
+            raise ValueError(
+                f"time_budget_s must be positive, got {self.time_budget_s!r}")
+        if self.impl != "auto" and self.impl not in ops.IMPLS:
+            raise ValueError(
+                f"unknown impl {self.impl!r}; known: ('auto',) + {ops.IMPLS}")
+        for rung in self.vns_ladder:
+            if not isinstance(rung, int) or rung < self.k:
+                raise ValueError(
+                    f"vns_ladder entries must be ints >= k, got {rung!r}")
+
+    def replace(self, **overrides) -> "BigMeansConfig":
+        """A copy with ``overrides`` applied (re-validated)."""
+        return dataclasses.replace(self, **overrides)
+
+    def resolved_impl(self) -> str:
+        """The concrete kernel implementation this config will run."""
+        return ops.resolve_impl(self.impl)
+
+    @classmethod
+    def from_workload(cls, workload, **overrides) -> "BigMeansConfig":
+        """Derive a config from a workload descriptor.
+
+        New-style workloads (``configs/bigmeans_paper.BigMeansWorkload``)
+        carry their knobs as an embedded ``.algo`` BigMeansConfig, which is
+        returned (with ``overrides`` applied).  Legacy duck-typed workloads
+        are read field-by-field (``chunks_per_worker`` maps to ``n_chunks``).
+        """
+        algo = getattr(workload, "algo", None)
+        if isinstance(algo, cls):
+            return algo.replace(**overrides) if overrides else algo
+        fields = dict(
+            k=workload.k,
+            s=workload.s,
+            n_chunks=getattr(workload, "chunks_per_worker", 100),
+            sync_every=getattr(workload, "sync_every", 1),
+            max_iters=getattr(workload, "max_iters", 300),
+            tol=getattr(workload, "tol", 1e-4),
+            candidates=getattr(workload, "candidates", 3),
+            batch=getattr(workload, "batch", 1),
+            prefetch=getattr(workload, "prefetch", 2),
+        )
+        fields.update(overrides)
+        return cls(**fields)

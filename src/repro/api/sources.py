@@ -1,0 +1,262 @@
+"""Data sources: one protocol over "array here, provider there".
+
+The drivers historically split along data access: in-core drivers took a
+materialized array, the streaming runner took a ``provider(chunk_id)``
+callable.  A :class:`DataSource` exposes *both* views where possible —
+``as_array()`` for the in-core strategies and ``provider(s, seed)`` for the
+streaming strategy — so the execution strategy becomes a config knob instead
+of a calling convention.
+
+Chunk sampling uses the same counter-based scheme everywhere (NumPy
+``default_rng((seed, chunk_id))`` over row indices, with replacement):
+:class:`ArraySource` and :class:`MemmapSource` over the same rows serve
+byte-identical chunks, and restarts replay identical streams.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Callable, Iterable, Protocol, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class DataSource(Protocol):
+    """What a strategy needs from data: feature count + one or both views."""
+
+    @property
+    def n_features(self) -> int: ...
+
+    @property
+    def n_rows(self) -> int | None: ...
+
+    @property
+    def in_core(self) -> bool: ...
+
+    @property
+    def prefers_streaming(self) -> bool: ...
+
+    def as_array(self):
+        """The full dataset as a 2-D array (in-core strategies)."""
+        ...
+
+    def provider(self, s: int, *, seed: int = 0,
+                 with_replacement: bool = True) -> Callable[[int], np.ndarray]:
+        """A ``chunk_id -> [s, n]`` fetcher (streaming strategy)."""
+        ...
+
+
+class _SourceBase:
+    prefers_streaming = False
+    n_rows: int | None = None
+
+    @property
+    def in_core(self) -> bool:
+        return True
+
+    def as_array(self):
+        raise TypeError(
+            f"{type(self).__name__} cannot be materialized in-core; use the "
+            "'streaming' strategy (or 'auto', which picks it)")
+
+    def _uniform_chunk_ids(self, m: int, s: int, seed: int, chunk_id: int,
+                           with_replacement: bool = True):
+        rng = np.random.default_rng((seed, chunk_id))
+        if with_replacement:
+            idx = rng.integers(0, m, size=s)
+        else:
+            idx = rng.choice(m, size=s, replace=False)
+        # Canonical (sorted) row order: mostly-sequential reads off disk for
+        # memmaps, and byte-identical chunks across adapters over equal rows.
+        idx.sort()
+        return idx
+
+
+class ArraySource(_SourceBase):
+    """In-core array (np / jax).  Serves both views."""
+
+    def __init__(self, X):
+        if getattr(X, "ndim", None) != 2:
+            raise ValueError(f"expected a 2-D array, got shape "
+                             f"{getattr(X, 'shape', None)!r}")
+        self.X = X
+
+    @property
+    def n_features(self) -> int:
+        return self.X.shape[1]
+
+    @property
+    def n_rows(self) -> int:
+        return self.X.shape[0]
+
+    def as_array(self):
+        return self.X
+
+    def provider(self, s: int, *, seed: int = 0, with_replacement: bool = True):
+        X = np.asarray(self.X)
+        m = X.shape[0]
+
+        def fetch(chunk_id: int) -> np.ndarray:
+            idx = self._uniform_chunk_ids(m, s, seed, chunk_id,
+                                          with_replacement)
+            return np.asarray(X[idx], dtype=np.float32)
+
+        return fetch
+
+
+class MemmapSource(_SourceBase):
+    """An ``.npy`` file served through ``np.memmap`` (never fully loaded on
+    the streaming path; ``as_array`` does load it, for in-core strategies on
+    datasets that happen to fit)."""
+
+    prefers_streaming = True
+
+    def __init__(self, path: str | os.PathLike, *, dtype=np.float32):
+        self.path = os.fspath(path)
+        self.dtype = dtype
+        self.mm = np.load(self.path, mmap_mode="r")
+        if self.mm.ndim != 2:
+            raise ValueError(f"{self.path}: expected 2-D data, got shape "
+                             f"{self.mm.shape}")
+
+    @property
+    def n_features(self) -> int:
+        return self.mm.shape[1]
+
+    @property
+    def n_rows(self) -> int:
+        return self.mm.shape[0]
+
+    def as_array(self):
+        return np.asarray(self.mm, dtype=self.dtype)
+
+    def provider(self, s: int, *, seed: int = 0, with_replacement: bool = True):
+        mm = self.mm
+        m, dtype = mm.shape[0], self.dtype
+
+        def fetch(chunk_id: int) -> np.ndarray:
+            idx = self._uniform_chunk_ids(m, s, seed, chunk_id,
+                                          with_replacement)
+            return np.asarray(mm[idx], dtype=dtype)
+
+        return fetch
+
+
+class ProviderSource(_SourceBase):
+    """A user ``chunk_id -> [s, n]`` callable (the runner's native contract).
+
+    ``n_features`` is probed from chunk 0 if not given.  The callable owns
+    the chunk size; the config's ``s`` should match what it serves.
+    """
+
+    prefers_streaming = True
+
+    def __init__(self, fn: Callable[[int], np.ndarray], *,
+                 n_features: int | None = None, n_rows: int | None = None):
+        self.fn = fn
+        self._n_features = n_features
+        self.n_rows = n_rows
+        self._probe: np.ndarray | None = None
+
+    @property
+    def in_core(self) -> bool:
+        return False
+
+    @property
+    def n_features(self) -> int:
+        if self._n_features is None:
+            probe = np.asarray(self.fn(0))
+            if probe.ndim != 2:
+                raise ValueError(
+                    f"provider returned shape {probe.shape}; expected [s, n]")
+            # cache the probed chunk: provider may be expensive or
+            # non-idempotent, and the run will ask for chunk 0 first anyway
+            self._probe = probe
+            self._n_features = int(probe.shape[1])
+        return self._n_features
+
+    def provider(self, s: int, *, seed: int = 0, with_replacement: bool = True):
+        # the callable owns chunk contents; sampling knobs don't apply
+        def fetch(chunk_id: int) -> np.ndarray:
+            if chunk_id == 0 and self._probe is not None:
+                out, self._probe = self._probe, None
+                return out
+            return self.fn(chunk_id)
+
+        return fetch
+
+
+class IteratorSource(_SourceBase):
+    """A stream of ``[s, n]`` chunk arrays (generator, DataLoader, socket...).
+
+    Chunks are consumed in order; a small reorder cache absorbs the
+    out-of-order ids a prefetch queue may request.  One-shot: a second fit
+    over the same iterator continues where the first stopped.  When the
+    stream runs dry before the chunk budget, the run ends cleanly
+    (``EndOfStream``) instead of counting phantom fetch failures.
+    """
+
+    prefers_streaming = True
+
+    def __init__(self, chunks: Iterable, *, n_features: int | None = None):
+        self._it = iter(chunks)
+        self._cache: dict[int, np.ndarray] = {}
+        self._next_seq = 0
+        self._n_features = n_features
+
+    @property
+    def in_core(self) -> bool:
+        return False
+
+    @property
+    def n_features(self) -> int:
+        if self._n_features is None:
+            first = np.asarray(next(self._it))
+            self._cache[self._next_seq] = first
+            self._next_seq += 1
+            self._n_features = int(first.shape[1])
+        return self._n_features
+
+    def provider(self, s: int, *, seed: int = 0, with_replacement: bool = True):
+        from repro.cluster.runner import EndOfStream
+
+        def fetch(chunk_id: int) -> np.ndarray:
+            while chunk_id not in self._cache:
+                try:
+                    self._cache[self._next_seq] = np.asarray(next(self._it))
+                except StopIteration:
+                    raise EndOfStream(
+                        f"chunk stream exhausted before chunk {chunk_id}"
+                    ) from None
+                self._next_seq += 1
+            return self._cache.pop(chunk_id)
+
+        return fetch
+
+
+def as_source(data: Any, *, n_features: int | None = None) -> DataSource:
+    """Coerce anything reasonable into a :class:`DataSource`.
+
+    * ``DataSource`` — passed through;
+    * 2-D array (np / jax) — :class:`ArraySource`;
+    * ``str`` / ``os.PathLike`` (an ``.npy`` path) — :class:`MemmapSource`;
+    * callable — :class:`ProviderSource`;
+    * iterable / iterator of chunks — :class:`IteratorSource`.
+    """
+    if isinstance(data, (ArraySource, MemmapSource, ProviderSource,
+                         IteratorSource)):
+        return data
+    if isinstance(data, DataSource) and not callable(data):
+        return data
+    if isinstance(data, (str, os.PathLike)):
+        return MemmapSource(data)
+    if hasattr(data, "ndim") and hasattr(data, "shape"):
+        return ArraySource(data)
+    if callable(data):
+        return ProviderSource(data, n_features=n_features)
+    if hasattr(data, "__iter__") or hasattr(data, "__next__"):
+        return IteratorSource(data, n_features=n_features)
+    raise TypeError(
+        f"cannot build a DataSource from {type(data).__name__}; pass an "
+        "array, an .npy path, a provider(chunk_id) callable, an iterator of "
+        "chunks, or a DataSource")

@@ -1,0 +1,240 @@
+"""Driver strategy registry: how a Big-means fit executes.
+
+Every strategy wraps one of the existing drivers behind the common
+``fit(config, source, key) -> FitResult`` contract:
+
+* ``sequential`` — the paper's Algorithm 3 (``core.bigmeans.big_means``).
+* ``batched``    — B incumbent streams per device
+  (``big_means_batched``; with ``config.mesh`` the stream axis is sharded).
+* ``sharded``    — multi-worker chunk streams with periodic incumbent
+  exchange (``big_means_sharded``).
+* ``streaming``  — the out-of-core host runner (``cluster.runner.run``):
+  prefetch pipeline, checkpoints, time budget, VNS ladder.
+* ``auto``       — picks one of the above from the config + data source +
+  hardware topology.
+
+Strategies are registered by name so follow-up work (competitive sample-size
+optimization, stream fusion — arXiv:2403.18766 / 2410.14548) plugs in as new
+entries instead of new entry points.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.api.config import BigMeansConfig
+from repro.api.result import FitResult
+from repro.api.sources import DataSource
+
+StrategyFn = Callable[[BigMeansConfig, DataSource, jax.Array], FitResult]
+
+_STRATEGIES: dict[str, StrategyFn] = {}
+
+
+def register_strategy(name: str):
+    """Decorator: register ``fn(config, source, key) -> FitResult``."""
+    def deco(fn: StrategyFn) -> StrategyFn:
+        _STRATEGIES[name] = fn
+        return fn
+    return deco
+
+
+def get_strategy(name: str) -> StrategyFn:
+    if name == "auto":
+        return _fit_auto
+    try:
+        return _STRATEGIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown strategy {name!r}; known: "
+            f"{['auto'] + list_strategies()}") from None
+
+
+def list_strategies() -> list[str]:
+    return sorted(_STRATEGIES)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _require_array(source: DataSource, strategy: str):
+    if not source.in_core:
+        raise TypeError(
+            f"strategy {strategy!r} needs in-core data but the source "
+            f"({type(source).__name__}) cannot be materialized; use "
+            "strategy='streaming' (or 'auto')")
+    return source.as_array()
+
+
+def _trace_from_infos(infos) -> list:
+    f_new = np.asarray(infos.f_new, dtype=np.float64)
+    accepted = np.asarray(infos.accepted)
+    return [(int(i), float(f), bool(a))
+            for i, (f, a) in enumerate(zip(f_new, accepted))]
+
+
+def _result_from_state(state, infos, cfg, strategy, **extras) -> FitResult:
+    return FitResult(
+        centroids=state.centroids,
+        objective=float(state.f_best),
+        algorithm="big_means",
+        strategy=strategy,
+        n_chunks=int(np.asarray(infos.f_new).size),
+        n_accepted=int(state.n_accepted),
+        n_iterations=int(np.sum(np.asarray(infos.lloyd_iters))),
+        n_dist_evals=float(state.n_dist_evals),
+        trace=_trace_from_infos(infos),
+        checkpoint_dir=None,
+        config=cfg,
+        extras=extras,
+    )
+
+
+def _mesh_size(mesh) -> int:
+    return int(mesh.devices.size)
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+
+@register_strategy("sequential")
+def _fit_sequential(cfg: BigMeansConfig, source: DataSource,
+                    key: jax.Array) -> FitResult:
+    from repro.core import bigmeans
+
+    X = _require_array(source, "sequential")
+    state, infos = bigmeans.big_means(
+        X, key, k=cfg.k, s=cfg.s, n_chunks=cfg.n_chunks,
+        max_iters=cfg.max_iters, tol=cfg.tol, candidates=cfg.candidates,
+        impl=cfg.impl, with_replacement=cfg.with_replacement)
+    return _result_from_state(state, infos, cfg, "sequential")
+
+
+@register_strategy("batched")
+def _fit_batched(cfg: BigMeansConfig, source: DataSource,
+                 key: jax.Array) -> FitResult:
+    from repro.core import bigmeans
+
+    if cfg.n_chunks % cfg.batch:
+        raise ValueError(
+            f"strategy 'batched' needs batch ({cfg.batch}) to divide "
+            f"n_chunks ({cfg.n_chunks})")
+    rounds = cfg.n_chunks // cfg.batch
+    if rounds % cfg.sync_every:
+        raise ValueError(
+            f"strategy 'batched' needs sync_every ({cfg.sync_every}) to "
+            f"divide the round count ({rounds} = n_chunks / batch)")
+    if cfg.mesh is not None and cfg.batch % _mesh_size(cfg.mesh):
+        raise ValueError(
+            f"stream mesh has {_mesh_size(cfg.mesh)} devices, which must "
+            f"divide batch ({cfg.batch})")
+
+    X = _require_array(source, "batched")
+    state, infos = bigmeans.big_means_batched(
+        X, key, k=cfg.k, s=cfg.s, batch=cfg.batch, rounds=rounds,
+        sync_every=cfg.sync_every, max_iters=cfg.max_iters, tol=cfg.tol,
+        candidates=cfg.candidates, impl=cfg.impl,
+        with_replacement=cfg.with_replacement, mesh=cfg.mesh,
+        stream_axis=cfg.stream_axis)
+    return _result_from_state(
+        state, infos, cfg, "batched", batch=cfg.batch, rounds=rounds)
+
+
+@register_strategy("sharded")
+def _fit_sharded(cfg: BigMeansConfig, source: DataSource,
+                 key: jax.Array) -> FitResult:
+    from repro.core import bigmeans
+    from repro.launch.mesh import make_mesh
+
+    mesh = cfg.mesh
+    if mesh is None:
+        ndev = len(jax.devices())
+        mesh = make_mesh((ndev,), cfg.mesh_axes[:1])
+    workers = _mesh_size(mesh)
+    if cfg.n_chunks % workers:
+        raise ValueError(
+            f"strategy 'sharded' needs the worker count ({workers}) to "
+            f"divide n_chunks ({cfg.n_chunks})")
+    chunks_per_worker = cfg.n_chunks // workers
+    if chunks_per_worker % cfg.sync_every:
+        raise ValueError(
+            f"strategy 'sharded' needs sync_every ({cfg.sync_every}) to "
+            f"divide chunks_per_worker ({chunks_per_worker} = "
+            f"n_chunks / workers)")
+
+    X = _require_array(source, "sharded")
+    state, infos = bigmeans.big_means_sharded(
+        X, key, mesh=mesh, k=cfg.k, s=cfg.s,
+        chunks_per_worker=chunks_per_worker, sync_every=cfg.sync_every,
+        axes=tuple(mesh.axis_names), max_iters=cfg.max_iters, tol=cfg.tol,
+        candidates=cfg.candidates, impl=cfg.impl,
+        with_replacement=cfg.with_replacement)
+    return _result_from_state(
+        state, infos, cfg, "sharded",
+        workers=workers, chunks_per_worker=chunks_per_worker)
+
+
+@register_strategy("streaming")
+def _fit_streaming(cfg: BigMeansConfig, source: DataSource,
+                   key: jax.Array) -> FitResult:
+    from repro.cluster import runner
+
+    provider = source.provider(
+        cfg.s, seed=cfg.seed, with_replacement=cfg.with_replacement)
+    state, metrics = runner.run(
+        provider, cfg, n_features=source.n_features, resume=cfg.resume,
+        key=key)
+    return FitResult(
+        centroids=state.centroids,
+        objective=float(state.f_best),
+        algorithm="big_means",
+        strategy="streaming",
+        n_chunks=metrics.chunks_done,
+        n_accepted=metrics.accepted,
+        n_iterations=0,          # the runner does not surface Lloyd iters
+        n_dist_evals=float(state.n_dist_evals),
+        wall_time_s=metrics.wall_time_s,
+        trace=list(metrics.trace),
+        checkpoint_dir=cfg.ckpt_dir,
+        config=cfg,
+        extras={"chunks_failed": metrics.chunks_failed},
+    )
+
+
+def resolve_auto(cfg: BigMeansConfig, source: DataSource) -> str:
+    """Pick a concrete strategy from config + data source + topology.
+
+    Out-of-core / stream-shaped sources and runner-only features (ckpt,
+    time budget, VNS) go to ``streaming``; ``batch > 1`` goes to
+    ``batched``; a mesh or a multi-device host goes to ``sharded``;
+    otherwise the paper's ``sequential``.
+    """
+    wants_runner = (cfg.ckpt_dir is not None or cfg.time_budget_s is not None
+                    or bool(cfg.vns_ladder))
+    if not source.in_core or source.prefers_streaming or wants_runner:
+        return "streaming"
+    if cfg.batch > 1:
+        return "batched"
+    if cfg.mesh is not None or len(jax.devices()) > 1:
+        # only if the topology meets the sharded driver's preconditions —
+        # auto must never pick a strategy that rejects this config
+        workers = (_mesh_size(cfg.mesh) if cfg.mesh is not None
+                   else len(jax.devices()))
+        if (cfg.n_chunks % workers == 0
+                and (cfg.n_chunks // workers) % cfg.sync_every == 0):
+            return "sharded"
+    return "sequential"
+
+
+def _fit_auto(cfg: BigMeansConfig, source: DataSource,
+              key: jax.Array) -> FitResult:
+    name = resolve_auto(cfg, source)
+    result = _STRATEGIES[name](cfg, source, key)
+    result.extras["auto"] = True
+    return result

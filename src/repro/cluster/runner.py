@@ -30,6 +30,7 @@ import dataclasses
 import queue
 import threading
 import time
+import warnings
 from typing import Callable, Iterator
 
 import jax
@@ -42,32 +43,33 @@ from repro.core import bigmeans
 ChunkProvider = Callable[[int], np.ndarray]
 
 
-@dataclasses.dataclass
-class RunnerConfig:
-    k: int
-    s: int
-    n_chunks: int = 1_000_000         # effectively "until budget"
-    max_iters: int = 300
-    tol: float = 1e-4
-    candidates: int = 3
-    impl: str = "auto"
-    batch: int = 1                    # concurrent chunk streams per step
-    prefetch: int = 2                 # chunk-queue depth; 0 = synchronous
-    time_budget_s: float | None = None   # paper's cpu_max
-    ckpt_dir: str | None = None
-    ckpt_every: int = 100
-    log_every: int = 50
-    seed: int = 0
-    # --- VNS extension (paper §6 future work): when the incumbent stalls
-    # for `vns_patience` chunks, move to the next chunk size in the ladder
-    # (stronger shaking on smaller chunks, finer approximation on larger);
-    # an acceptance resets to the base size.  Empty ladder = paper baseline.
-    vns_ladder: tuple = ()
-    vns_patience: int = 10
+class EndOfStream(Exception):
+    """Raised by a provider to end the run cleanly before ``n_chunks``
+    (e.g. a finite chunk iterator ran dry).  Not counted as a failure."""
+
+
+def RunnerConfig(**kwargs):
+    """Deprecated shim: the knob truth moved to `repro.api.BigMeansConfig`.
+
+    Accepts the historical ``RunnerConfig`` keywords (a strict subset of
+    ``BigMeansConfig``'s fields) and preserves the old ``n_chunks`` default
+    of "effectively until budget".  Remove after one release.
+    """
+    warnings.warn(
+        "repro.cluster.runner.RunnerConfig is deprecated; use "
+        "repro.api.BigMeansConfig",
+        DeprecationWarning, stacklevel=2)
+    from repro.api.config import BigMeansConfig
+
+    kwargs.setdefault("n_chunks", 1_000_000)
+    return BigMeansConfig(**kwargs)
 
 
 @dataclasses.dataclass
 class RunnerMetrics:
+    """``trace`` holds ``(chunk_id, f_best, f_new)`` progress entries and
+    ``("fetch_error", chunk_id, "ExcType: message")`` entries for failed
+    fetches, so streaming failures are debuggable from the result."""
     chunks_done: int = 0
     chunks_failed: int = 0
     accepted: int = 0
@@ -76,12 +78,22 @@ class RunnerMetrics:
     trace: list = dataclasses.field(default_factory=list)
 
 
+class _FetchFailure:
+    """A failed chunk fetch: carries the provider's exception type+message."""
+
+    __slots__ = ("error",)
+
+    def __init__(self, exc: BaseException):
+        self.error = f"{type(exc).__name__}: {exc}"
+
+
 class _Prefetcher:
     """Background chunk fetcher: provider call + np conversion + device_put
     run off the main thread, double-buffered through a bounded queue.
 
-    Yields ``(chunk_id, chunk-or-None)`` in id order; ``None`` marks a
-    failed fetch (the provider raised) so the consumer can account for it.
+    Yields ``(chunk_id, chunk-or-_FetchFailure)`` in id order; a
+    ``_FetchFailure`` marks a failed fetch (the provider raised) so the
+    consumer can account for it and record the cause.
     """
 
     _DONE = object()
@@ -102,8 +114,10 @@ class _Prefetcher:
                 self._fault_injector(cid)
             arr = np.asarray(self._provider(cid), dtype=np.float32)
             return jax.device_put(arr)
-        except Exception:
-            return None
+        except EndOfStream:
+            return self._DONE
+        except Exception as exc:
+            return _FetchFailure(exc)
 
     def _put(self, item) -> bool:
         while not self._stop.is_set():
@@ -118,7 +132,10 @@ class _Prefetcher:
         for cid in self._ids:
             if self._stop.is_set():
                 return
-            if not self._put((cid, self._fetch(cid))):
+            item = self._fetch(cid)
+            if item is self._DONE:          # provider signalled end-of-stream
+                break
+            if not self._put((cid, item)):
                 return
         self._put(self._DONE)
 
@@ -148,22 +165,30 @@ def _sync_chunks(provider, ids, fault_injector):
                 fault_injector(cid)
             arr = np.asarray(provider(cid), dtype=np.float32)
             yield cid, jax.device_put(arr)
-        except Exception:
-            yield cid, None
+        except EndOfStream:
+            return
+        except Exception as exc:
+            yield cid, _FetchFailure(exc)
 
 
 def run(
     provider: ChunkProvider,
-    cfg: RunnerConfig,
+    cfg,
     *,
     n_features: int,
     resume: bool = True,
     fault_injector: Callable[[int], None] | None = None,
+    key: jax.Array | None = None,
 ) -> tuple[bigmeans.BigMeansState, RunnerMetrics]:
-    """Stream chunks through Big-means until the chunk count or time budget."""
+    """Stream chunks through Big-means until the chunk count or time budget.
+
+    ``cfg`` is a `repro.api.BigMeansConfig` (or anything with the same
+    fields; the deprecated :func:`RunnerConfig` shim builds one).
+    """
     state = bigmeans.init_state(cfg.k, n_features)
     start_chunk = 0
-    key = jax.random.PRNGKey(cfg.seed)
+    if key is None:
+        key = jax.random.PRNGKey(cfg.seed)
 
     if resume and cfg.ckpt_dir and checkpoint.latest_step(cfg.ckpt_dir) is not None:
         (state, key), start_chunk = checkpoint.restore(
@@ -224,8 +249,10 @@ def run(
             if cfg.time_budget_s is not None:
                 if time.monotonic() - t0 > cfg.time_budget_s:
                     break
-            if chunk is None:
+            if chunk is None or isinstance(chunk, _FetchFailure):
                 metrics.chunks_failed += 1
+                if isinstance(chunk, _FetchFailure):
+                    metrics.trace.append(("fetch_error", chunk_id, chunk.error))
                 continue
             s_now = ladder[rung]
             if chunk.shape[0] > s_now:

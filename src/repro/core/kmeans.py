@@ -162,7 +162,7 @@ def lloyd_batched(
     # epilogue stays on the jnp oracle (the Pallas kernels are not batched
     # at this callsite), mapped per stream rather than vmapped so each
     # stream's distance matrix stays cache-resident on CPU.
-    eff = ops.default_impl() if impl == "auto" else impl
+    eff = ops.resolve_impl(impl)
     if eff.startswith("pallas"):
         eff = "ref"
 

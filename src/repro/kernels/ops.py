@@ -24,21 +24,40 @@ from repro.kernels import ref
 from repro.kernels.distance import assign_pallas
 from repro.kernels.update import update_pallas
 
-_DEFAULT_IMPL = None
+IMPLS = ("pallas", "pallas_interpret", "ref", "ref_chunked")
+
+_DEFAULT_IMPL: str | None = None    # explicit override; None = auto-detect
 
 
 def default_impl() -> str:
-    global _DEFAULT_IMPL
-    if _DEFAULT_IMPL is None:
-        _DEFAULT_IMPL = (
-            "pallas" if jax.default_backend() == "tpu" else "ref"
-        )
-    return _DEFAULT_IMPL
+    """The impl ``'auto'`` resolves to: the explicit override if one was set
+    via :func:`set_default_impl`, else a fresh backend probe (never cached,
+    so backend changes between calls are picked up)."""
+    if _DEFAULT_IMPL is not None:
+        return _DEFAULT_IMPL
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
-def set_default_impl(impl: str) -> None:
+def set_default_impl(impl: str | None) -> None:
+    """Override what ``'auto'`` resolves to; ``None`` restores auto-detection."""
+    if impl is not None and impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; known: {IMPLS}")
     global _DEFAULT_IMPL
     _DEFAULT_IMPL = impl
+
+
+def resolve_impl(impl: str | None = "auto") -> str:
+    """Resolve an ``impl`` knob to a concrete kernel implementation.
+
+    This is the one resolver every dispatch site (and the ``repro.api``
+    facade) routes through: ``'auto'``/``None`` resolve via
+    :func:`default_impl`, concrete names are validated and passed through.
+    """
+    if impl is None or impl == "auto":
+        return default_impl()
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; known: ('auto',) + {IMPLS}")
+    return impl
 
 
 def assign(
@@ -49,8 +68,7 @@ def assign(
     chunk: int = 65536,
 ) -> tuple[jax.Array, jax.Array]:
     """Nearest-centroid assignment.  x [m,n], c [k,n] -> (ids i32 [m], d f32 [m])."""
-    if impl == "auto":
-        impl = default_impl()
+    impl = resolve_impl(impl)
     if impl == "pallas":
         return assign_pallas(x, c)
     if impl == "pallas_interpret":
@@ -84,8 +102,7 @@ def update(
     impl: str = "auto",
 ) -> tuple[jax.Array, jax.Array]:
     """Cluster sums/counts.  x [m,n], ids [m] -> (sums [k,n], counts [k])."""
-    if impl == "auto":
-        impl = default_impl()
+    impl = resolve_impl(impl)
     if weights is not None:
         # Weighted path stays on the jnp oracle (cold path: coresets, K-means||).
         return ref.update_ref(x, ids, k, weights)
@@ -123,8 +140,7 @@ def fused_step(
     otherwise."""
     from repro.kernels import fused_step as fused
 
-    if impl == "auto":
-        impl = default_impl()
+    impl = resolve_impl(impl)
     k, n = c.shape[0], c.shape[1]
     if weights is None and fused.fits(k, n):
         if impl == "pallas":
@@ -171,8 +187,7 @@ def fused_step_batched(
     """
     from repro.kernels import fused_step as fused
 
-    if impl == "auto":
-        impl = default_impl()
+    impl = resolve_impl(impl)
     k, n = c.shape[1], c.shape[2]
     if fused.fits_batched(k, n):
         if impl == "pallas":

@@ -12,10 +12,9 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 import numpy as np
 
-from repro.cluster import runner
+from repro.api import BigMeansConfig, fit
 from repro.data.synthetic import GMMSpec, gmm_chunk
 from repro.models.registry import get_config
 
@@ -37,22 +36,20 @@ def main() -> None:
     spec = GMMSpec(m=m, n=cfg.n_features, components=cfg.k, spread=4.0,
                    seed=args.seed)
 
-    rcfg = runner.RunnerConfig(
-        k=cfg.k, s=cfg.s, n_chunks=args.chunks,
-        max_iters=cfg.max_iters, tol=cfg.tol, candidates=cfg.candidates,
-        batch=getattr(cfg, "batch", 1), prefetch=getattr(cfg, "prefetch", 2),
-        time_budget_s=args.time_budget, ckpt_dir=args.ckpt,
-        seed=args.seed)
+    rcfg = BigMeansConfig.from_workload(
+        cfg, n_chunks=args.chunks, time_budget_s=args.time_budget,
+        ckpt_dir=args.ckpt, seed=args.seed)
 
-    print(f"[train] {args.arch}: m={m} n={cfg.n_features} k={cfg.k} "
-          f"s={cfg.s} chunks={args.chunks} batch={rcfg.batch}")
-    state, metrics = runner.run(
-        lambda cid: np.asarray(gmm_chunk(spec, cid, cfg.s)), rcfg,
-        n_features=cfg.n_features)
-    print(f"[train] done: f_best={metrics.f_best:.6e} "
-          f"accepted={metrics.accepted}/{metrics.chunks_done} "
-          f"failed={metrics.chunks_failed} wall={metrics.wall_time_s:.1f}s "
-          f"n_d={float(state.n_dist_evals):.3e}")
+    print(f"[train] {args.arch}: m={m} n={cfg.n_features} k={rcfg.k} "
+          f"s={rcfg.s} chunks={args.chunks} batch={rcfg.batch}")
+    result = fit(
+        lambda cid: np.asarray(gmm_chunk(spec, cid, rcfg.s)), rcfg,
+        method="streaming", n_features=cfg.n_features)
+    failed = result.extras.get("chunks_failed", 0)
+    print(f"[train] done: f_best={result.objective:.6e} "
+          f"accepted={result.n_accepted}/{result.n_chunks} "
+          f"failed={failed} wall={result.wall_time_s:.1f}s "
+          f"n_d={result.n_dist_evals:.3e}")
 
 
 if __name__ == "__main__":

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import BigMeansConfig
 from repro.core import (
     big_means, big_means_batched, broadcast_state, chunk_step_batched,
     init_state, kmeanspp, lloyd, lloyd_batched, reduce_state,
@@ -226,7 +227,7 @@ def _provider_spec():
 def test_runner_batched_end_to_end():
     from repro.cluster import runner
     provider = _provider_spec()
-    cfg = runner.RunnerConfig(k=5, s=512, n_chunks=12, batch=4, seed=1)
+    cfg = BigMeansConfig(k=5, s=512, n_chunks=12, batch=4, seed=1)
     state, m = runner.run(provider, cfg, n_features=8)
     assert m.chunks_done == 12
     assert np.isfinite(m.f_best)
@@ -240,7 +241,7 @@ def test_runner_batched_partial_batch_and_failures():
         if cid in (2, 5):
             raise RuntimeError("node lost")
 
-    cfg = runner.RunnerConfig(k=5, s=512, n_chunks=11, batch=4, seed=2)
+    cfg = BigMeansConfig(k=5, s=512, n_chunks=11, batch=4, seed=2)
     state, m = runner.run(provider, cfg, n_features=8, fault_injector=bomb)
     assert m.chunks_failed == 2
     assert m.chunks_done == 9          # 2 full batches + partial final batch
@@ -251,8 +252,8 @@ def test_runner_prefetch_matches_sync():
     from ids, so pipelined and synchronous fetch produce identical runs."""
     from repro.cluster import runner
     provider = _provider_spec()
-    cfg_pre = runner.RunnerConfig(k=5, s=512, n_chunks=8, prefetch=3, seed=4)
-    cfg_syn = runner.RunnerConfig(k=5, s=512, n_chunks=8, prefetch=0, seed=4)
+    cfg_pre = BigMeansConfig(k=5, s=512, n_chunks=8, prefetch=3, seed=4)
+    cfg_syn = BigMeansConfig(k=5, s=512, n_chunks=8, prefetch=0, seed=4)
     st_p, m_p = runner.run(provider, cfg_pre, n_features=8)
     st_s, m_s = runner.run(provider, cfg_syn, n_features=8)
     assert m_p.chunks_done == m_s.chunks_done == 8

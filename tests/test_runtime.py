@@ -6,6 +6,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro.api import BigMeansConfig
 from repro.cluster import checkpoint, runner
 from repro.data.synthetic import GMMSpec, gmm_chunk
 from repro.train.optimizer import adamw, warmup_cosine
@@ -18,7 +19,7 @@ def provider(cid):
 
 
 def test_runner_end_to_end(tmp_path):
-    cfg = runner.RunnerConfig(k=5, s=1024, n_chunks=20,
+    cfg = BigMeansConfig(k=5, s=1024, n_chunks=20,
                               ckpt_dir=str(tmp_path), ckpt_every=8, seed=1)
     state, m = runner.run(provider, cfg, n_features=8)
     assert m.chunks_done == 20
@@ -27,10 +28,10 @@ def test_runner_end_to_end(tmp_path):
 
 
 def test_runner_restart_resumes_not_restarts(tmp_path):
-    cfg = runner.RunnerConfig(k=5, s=1024, n_chunks=10,
+    cfg = BigMeansConfig(k=5, s=1024, n_chunks=10,
                               ckpt_dir=str(tmp_path), ckpt_every=5, seed=1)
     runner.run(provider, cfg, n_features=8)
-    cfg2 = runner.RunnerConfig(k=5, s=1024, n_chunks=25,
+    cfg2 = BigMeansConfig(k=5, s=1024, n_chunks=25,
                                ckpt_dir=str(tmp_path), ckpt_every=5, seed=1)
     _, m2 = runner.run(provider, cfg2, n_features=8)
     assert m2.chunks_done <= 16            # resumed past the first 10
@@ -41,7 +42,7 @@ def test_runner_survives_chunk_failures(tmp_path):
         if cid in (2, 3, 7):
             raise RuntimeError("node lost")
 
-    cfg = runner.RunnerConfig(k=5, s=1024, n_chunks=12, seed=2)
+    cfg = BigMeansConfig(k=5, s=1024, n_chunks=12, seed=2)
     state, m = runner.run(provider, cfg, n_features=8, fault_injector=bomb)
     assert m.chunks_failed == 3
     assert m.chunks_done == 9
@@ -50,14 +51,14 @@ def test_runner_survives_chunk_failures(tmp_path):
 
 def test_runner_straggler_budget():
     # A straggling chunk is bounded by max_iters (compile-time constant):
-    cfg = runner.RunnerConfig(k=5, s=1024, n_chunks=3, max_iters=2, seed=4)
+    cfg = BigMeansConfig(k=5, s=1024, n_chunks=3, max_iters=2, seed=4)
     state, m = runner.run(provider, cfg, n_features=8)
     assert m.chunks_done == 3
 
 
 @pytest.mark.slow
 def test_runner_time_budget():
-    cfg = runner.RunnerConfig(k=5, s=1024, n_chunks=10**6,
+    cfg = BigMeansConfig(k=5, s=1024, n_chunks=10**6,
                               time_budget_s=2.0, seed=5)
     state, m = runner.run(provider, cfg, n_features=8)
     assert m.wall_time_s < 20.0
@@ -110,9 +111,9 @@ def test_runner_vns_ladder():
     """Beyond-paper: VNS chunk-size shaking (the paper's §6 future work).
     Stalls escalate to smaller chunks; acceptances reset; quality is not
     hurt vs the fixed-size baseline."""
-    cfg_base = runner.RunnerConfig(k=5, s=1024, n_chunks=25, seed=7)
+    cfg_base = BigMeansConfig(k=5, s=1024, n_chunks=25, seed=7)
     _, m_base = runner.run(provider, cfg_base, n_features=8)
-    cfg_vns = runner.RunnerConfig(k=5, s=1024, n_chunks=25, seed=7,
+    cfg_vns = BigMeansConfig(k=5, s=1024, n_chunks=25, seed=7,
                                   vns_ladder=(512, 256), vns_patience=3)
     _, m_vns = runner.run(provider, cfg_vns, n_features=8)
     assert np.isfinite(m_vns.f_best)
