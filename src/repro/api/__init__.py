@@ -74,6 +74,46 @@ __all__ = [
 ]
 
 
+def _pretune(cfg: BigMeansConfig, source) -> None:
+    """Populate the autotune cache eagerly, off the jit path.
+
+    The drivers call the kernels from inside ``jax.jit``, where operands
+    are tracers and timing is impossible — so tuning happens here, once,
+    with concrete arrays at the exact hot-path shapes this fit will launch
+    (single fused step at [s, n], batched step at [batch, s, n], and the
+    epilogue assignment).  Compiled-Pallas only: interpret mode is a CPU
+    correctness harness whose timings would be meaningless.
+    """
+    from repro.kernels import ops
+    from repro.kernels import precision as px
+
+    impl = cfg.resolved_impl()
+    if impl != "pallas":
+        return
+    import jax.numpy as jnp
+
+    # Resolve 'auto' against the data dtype when the source exposes one
+    # (in-core arrays/memmaps); streamed chunks arrive f32 unless bf16 is
+    # explicitly requested, so f32 is the right fallback.
+    data_dtype = getattr(getattr(source, "X", None), "dtype", None) \
+        or getattr(getattr(source, "mm", None), "dtype", None) or jnp.float32
+    prec = px.resolve(cfg.precision, data_dtype)
+    kx, kc = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (cfg.s, source.n_features), jnp.float32)
+    c = jax.random.normal(kc, (cfg.k, source.n_features), jnp.float32)
+    x = px.cast_storage(x, prec)
+    ops.fused_step(x, c, impl=impl, precision=prec)
+    ops.assign(x, c, impl=impl, precision=prec)
+    if prec == "bf16":
+        # lloyd's objective epilogue assigns with f32 contractions (see
+        # core/kmeans.py) — tune that key too, or it runs untuned defaults.
+        ops.assign(x, c, impl=impl, precision="f32")
+    if cfg.batch > 1:
+        xb = jnp.broadcast_to(x, (cfg.batch,) + x.shape)
+        cb = jnp.broadcast_to(c, (cfg.batch,) + c.shape)
+        ops.fused_step_batched(xb, cb, impl=impl, precision=prec)
+
+
 def list_methods() -> list[str]:
     """Everything :func:`fit` accepts as ``method``."""
     return ["auto"] + list_strategies() + list_baselines()
@@ -123,14 +163,33 @@ def fit(
         cfg = config.replace(**overrides) if overrides else config
 
     source = as_source(data, n_features=n_features)
-    fn = _resolve_method(method)
-    if key is None:
-        key = jax.random.PRNGKey(cfg.seed)
+    prev_tuning = None
+    try:
+        if cfg.autotune:
+            # Scoped to this call (exception paths included): the tuner
+            # times candidate kernel tilings for this fit's shapes eagerly
+            # (off the jit path) and caches the winners (see
+            # repro.kernels.autotune); results are unaffected.  The
+            # previous enable state is restored afterwards so a later fit
+            # with autotune=False never pays surprise timing sweeps.
+            from repro.kernels import autotune
 
-    t0 = time.monotonic()
-    result = fn(cfg, source, key)
-    jax.block_until_ready(result.centroids)
-    result.wall_time_s = time.monotonic() - t0
+            prev_tuning = autotune.enabled()
+            autotune.enable(True)
+            _pretune(cfg, source)
+        fn = _resolve_method(method)
+        if key is None:
+            key = jax.random.PRNGKey(cfg.seed)
+
+        t0 = time.monotonic()
+        result = fn(cfg, source, key)
+        jax.block_until_ready(result.centroids)
+        result.wall_time_s = time.monotonic() - t0
+    finally:
+        if prev_tuning is not None:
+            from repro.kernels import autotune
+
+            autotune.enable(prev_tuning)
     return result
 
 

@@ -17,6 +17,7 @@ import dataclasses
 from typing import Any
 
 from repro.kernels import ops
+from repro.kernels import precision as px
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +33,15 @@ class BigMeansConfig:
     * ``candidates`` — K-means++ candidates per degenerate slot.
     * ``impl`` — kernel implementation ('auto' resolves via
       :func:`repro.kernels.ops.resolve_impl`).
+    * ``precision`` — kernel-stack precision (``'auto'`` | ``'f32'`` |
+      ``'bf16'`` | ``'bf16x3'``): bf16 stores/streams chunks at half the
+      bytes and feeds bf16 operands to the MXU; accumulators, norms, the
+      objective and every ``f_best`` comparison stay f32 (see
+      :mod:`repro.kernels.precision`).  ``'auto'`` follows the data dtype
+      (bf16 arrays keep bf16 compute, everything else f32).
+    * ``autotune`` — time candidate kernel tilings once per shape and cache
+      the winner (:mod:`repro.kernels.autotune`); perf-only, never changes
+      results.
     * ``with_replacement`` — chunk sampling scheme.
 
     Parallel execution:
@@ -59,6 +69,8 @@ class BigMeansConfig:
     tol: float = 1e-4
     candidates: int = 3
     impl: str = "auto"
+    precision: str = "auto"
+    autotune: bool = False
     with_replacement: bool = True
     # --- parallel execution
     batch: int = 1
@@ -107,6 +119,11 @@ class BigMeansConfig:
         if self.impl != "auto" and self.impl not in ops.IMPLS:
             raise ValueError(
                 f"unknown impl {self.impl!r}; known: ('auto',) + {ops.IMPLS}")
+        if self.precision != "auto":
+            px.check(self.precision)
+        if not isinstance(self.autotune, bool):
+            raise ValueError(
+                f"autotune must be a bool, got {self.autotune!r}")
         for rung in self.vns_ladder:
             if not isinstance(rung, int) or rung < self.k:
                 raise ValueError(
@@ -142,6 +159,7 @@ class BigMeansConfig:
             candidates=getattr(workload, "candidates", 3),
             batch=getattr(workload, "batch", 1),
             prefetch=getattr(workload, "prefetch", 2),
+            precision=getattr(workload, "precision", "auto"),
         )
         fields.update(overrides)
         return cls(**fields)

@@ -11,6 +11,13 @@ Chunk sampling uses the same counter-based scheme everywhere (NumPy
 ``default_rng((seed, chunk_id))`` over row indices, with replacement):
 :class:`ArraySource` and :class:`MemmapSource` over the same rows serve
 byte-identical chunks, and restarts replay identical streams.
+
+``provider(..., dtype=...)`` controls the dtype chunks are served in:
+an explicit dtype always wins, ``None`` means the source's native default.
+``BigMeansConfig(precision='bf16')`` makes the streaming strategy request
+``ml_dtypes.bfloat16`` chunks (``repro.kernels.precision.host_dtype``), so
+the cast happens on the host (in the prefetch thread) and host->device
+transfers move half the bytes.
 """
 from __future__ import annotations
 
@@ -41,8 +48,14 @@ class DataSource(Protocol):
         ...
 
     def provider(self, s: int, *, seed: int = 0,
-                 with_replacement: bool = True) -> Callable[[int], np.ndarray]:
-        """A ``chunk_id -> [s, n]`` fetcher (streaming strategy)."""
+                 with_replacement: bool = True,
+                 dtype=None) -> Callable[[int], np.ndarray]:
+        """A ``chunk_id -> [s, n]`` fetcher (streaming strategy).
+
+        ``dtype``: explicit request wins; ``None`` serves the source's
+        native default (float32 for array/provider/iterator sources, the
+        file dtype for memmaps).
+        """
         ...
 
 
@@ -92,14 +105,16 @@ class ArraySource(_SourceBase):
     def as_array(self):
         return self.X
 
-    def provider(self, s: int, *, seed: int = 0, with_replacement: bool = True):
+    def provider(self, s: int, *, seed: int = 0, with_replacement: bool = True,
+                 dtype=None):
         X = np.asarray(self.X)
         m = X.shape[0]
+        dtype = np.float32 if dtype is None else dtype
 
         def fetch(chunk_id: int) -> np.ndarray:
             idx = self._uniform_chunk_ids(m, s, seed, chunk_id,
                                           with_replacement)
-            return np.asarray(X[idx], dtype=np.float32)
+            return np.asarray(X[idx], dtype=dtype)
 
         return fetch
 
@@ -130,9 +145,12 @@ class MemmapSource(_SourceBase):
     def as_array(self):
         return np.asarray(self.mm, dtype=self.dtype)
 
-    def provider(self, s: int, *, seed: int = 0, with_replacement: bool = True):
+    def provider(self, s: int, *, seed: int = 0, with_replacement: bool = True,
+                 dtype=None):
         mm = self.mm
-        m, dtype = mm.shape[0], self.dtype
+        m = mm.shape[0]
+        # Explicit request wins; None falls back to the source's own dtype.
+        dtype = self.dtype if dtype is None else dtype
 
         def fetch(chunk_id: int) -> np.ndarray:
             idx = self._uniform_chunk_ids(m, s, seed, chunk_id,
@@ -175,13 +193,16 @@ class ProviderSource(_SourceBase):
             self._n_features = int(probe.shape[1])
         return self._n_features
 
-    def provider(self, s: int, *, seed: int = 0, with_replacement: bool = True):
+    def provider(self, s: int, *, seed: int = 0, with_replacement: bool = True,
+                 dtype=None):
+        dtype = np.float32 if dtype is None else dtype
+
         # the callable owns chunk contents; sampling knobs don't apply
         def fetch(chunk_id: int) -> np.ndarray:
             if chunk_id == 0 and self._probe is not None:
                 out, self._probe = self._probe, None
-                return out
-            return self.fn(chunk_id)
+                return np.asarray(out, dtype=dtype)
+            return np.asarray(self.fn(chunk_id), dtype=dtype)
 
         return fetch
 
@@ -217,8 +238,11 @@ class IteratorSource(_SourceBase):
             self._n_features = int(first.shape[1])
         return self._n_features
 
-    def provider(self, s: int, *, seed: int = 0, with_replacement: bool = True):
+    def provider(self, s: int, *, seed: int = 0, with_replacement: bool = True,
+                 dtype=None):
         from repro.cluster.runner import EndOfStream
+
+        dtype = np.float32 if dtype is None else dtype
 
         def fetch(chunk_id: int) -> np.ndarray:
             while chunk_id not in self._cache:
@@ -229,7 +253,7 @@ class IteratorSource(_SourceBase):
                         f"chunk stream exhausted before chunk {chunk_id}"
                     ) from None
                 self._next_seq += 1
-            return self._cache.pop(chunk_id)
+            return np.asarray(self._cache.pop(chunk_id), dtype=dtype)
 
         return fetch
 

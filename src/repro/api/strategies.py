@@ -112,7 +112,8 @@ def _fit_sequential(cfg: BigMeansConfig, source: DataSource,
     state, infos = bigmeans.big_means(
         X, key, k=cfg.k, s=cfg.s, n_chunks=cfg.n_chunks,
         max_iters=cfg.max_iters, tol=cfg.tol, candidates=cfg.candidates,
-        impl=cfg.impl, with_replacement=cfg.with_replacement)
+        impl=cfg.impl, with_replacement=cfg.with_replacement,
+        precision=cfg.precision)
     return _result_from_state(state, infos, cfg, "sequential")
 
 
@@ -140,8 +141,8 @@ def _fit_batched(cfg: BigMeansConfig, source: DataSource,
         X, key, k=cfg.k, s=cfg.s, batch=cfg.batch, rounds=rounds,
         sync_every=cfg.sync_every, max_iters=cfg.max_iters, tol=cfg.tol,
         candidates=cfg.candidates, impl=cfg.impl,
-        with_replacement=cfg.with_replacement, mesh=cfg.mesh,
-        stream_axis=cfg.stream_axis)
+        with_replacement=cfg.with_replacement, precision=cfg.precision,
+        mesh=cfg.mesh, stream_axis=cfg.stream_axis)
     return _result_from_state(
         state, infos, cfg, "batched", batch=cfg.batch, rounds=rounds)
 
@@ -174,7 +175,7 @@ def _fit_sharded(cfg: BigMeansConfig, source: DataSource,
         chunks_per_worker=chunks_per_worker, sync_every=cfg.sync_every,
         axes=tuple(mesh.axis_names), max_iters=cfg.max_iters, tol=cfg.tol,
         candidates=cfg.candidates, impl=cfg.impl,
-        with_replacement=cfg.with_replacement)
+        with_replacement=cfg.with_replacement, precision=cfg.precision)
     return _result_from_state(
         state, infos, cfg, "sharded",
         workers=workers, chunks_per_worker=chunks_per_worker)
@@ -184,9 +185,14 @@ def _fit_sharded(cfg: BigMeansConfig, source: DataSource,
 def _fit_streaming(cfg: BigMeansConfig, source: DataSource,
                    key: jax.Array) -> FitResult:
     from repro.cluster import runner
+    from repro.kernels import precision as px
 
+    # bf16 precision: chunks are cast on the host (prefetch thread) so
+    # host->device transfers move half the bytes, not just HBM reads.
+    # host_dtype is None otherwise: the source serves its native default.
     provider = source.provider(
-        cfg.s, seed=cfg.seed, with_replacement=cfg.with_replacement)
+        cfg.s, seed=cfg.seed, with_replacement=cfg.with_replacement,
+        dtype=px.host_dtype(cfg.precision))
     state, metrics = runner.run(
         provider, cfg, n_features=source.n_features, resume=cfg.resume,
         key=key)

@@ -19,7 +19,9 @@ fed to the jitted ``chunk_step``.  Design properties (DESIGN.md §6):
 * **pipelining** — a background thread prefetches up to ``prefetch`` chunks
   into a bounded queue and stages them on device (``jax.device_put``), so
   provider fetch and host→device transfer overlap device compute instead of
-  blocking it.  ``batch`` > 1 feeds B chunks at a time to the batched
+  blocking it.  Under ``cfg.precision='bf16'`` the prefetch thread casts
+  chunks to bf16 *on the host* before ``device_put``, halving the
+  host→device bytes as well as the device-side HBM traffic.  ``batch`` > 1 feeds B chunks at a time to the batched
   driver (``chunk_step_batched``): B Lloyd searches advance concurrently
   against the incumbent and the best result is kept — the single-device
   analogue of the sharded driver's worker streams.
@@ -99,9 +101,10 @@ class _Prefetcher:
     _DONE = object()
 
     def __init__(self, provider, ids, depth,
-                 fault_injector=None):
+                 fault_injector=None, dtype=np.float32):
         self._provider = provider
         self._ids = ids
+        self._dtype = dtype
         self._fault_injector = fault_injector
         self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
         self._stop = threading.Event()
@@ -112,7 +115,7 @@ class _Prefetcher:
         try:
             if self._fault_injector is not None:
                 self._fault_injector(cid)
-            arr = np.asarray(self._provider(cid), dtype=np.float32)
+            arr = np.asarray(self._provider(cid), dtype=self._dtype)
             return jax.device_put(arr)
         except EndOfStream:
             return self._DONE
@@ -157,13 +160,13 @@ class _Prefetcher:
         self._thread.join(timeout=5.0)
 
 
-def _sync_chunks(provider, ids, fault_injector):
+def _sync_chunks(provider, ids, fault_injector, dtype=np.float32):
     """prefetch=0 fallback: fetch in the main thread (debug / determinism)."""
     for cid in ids:
         try:
             if fault_injector is not None:
                 fault_injector(cid)
-            arr = np.asarray(provider(cid), dtype=np.float32)
+            arr = np.asarray(provider(cid), dtype=dtype)
             yield cid, jax.device_put(arr)
         except EndOfStream:
             return
@@ -202,11 +205,15 @@ def run(
     rung, stall = 0, 0
     last_s = cfg.s
 
+    from repro.kernels import precision as px
+
+    precision = getattr(cfg, "precision", "auto")
+    host_dtype = px.host_dtype(precision) or np.float32
     ids = range(start_chunk, cfg.n_chunks)
     source = (
-        _Prefetcher(provider, ids, cfg.prefetch, fault_injector)
+        _Prefetcher(provider, ids, cfg.prefetch, fault_injector, host_dtype)
         if cfg.prefetch > 0
-        else _sync_chunks(provider, ids, fault_injector)
+        else _sync_chunks(provider, ids, fault_injector, host_dtype)
     )
 
     def step_batch(state, pending):
@@ -220,6 +227,7 @@ def run(
                 pending[0][1], state, cks[0],
                 max_iters=cfg.max_iters, tol=cfg.tol,
                 candidates=cfg.candidates, impl=cfg.impl,
+                precision=precision,
             )
         chunks = jnp.stack([c for _, c in pending])
         states = bigmeans.broadcast_state(state, len(pending))
@@ -227,6 +235,7 @@ def run(
             chunks, states, jnp.stack(cks),
             max_iters=cfg.max_iters, tol=cfg.tol,
             candidates=cfg.candidates, impl=cfg.impl,
+            precision=precision,
         )
         return bigmeans.reduce_state(states, base=state), info
 

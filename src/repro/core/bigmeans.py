@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import kmeans, kmeanspp
+from repro.kernels import precision as px
 
 if hasattr(jax, "shard_map"):
     _shard_map = functools.partial(jax.shard_map, check_vma=False)
@@ -65,7 +66,8 @@ def init_state(k: int, n: int) -> BigMeansState:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("max_iters", "tol", "candidates", "impl")
+    jax.jit,
+    static_argnames=("max_iters", "tol", "candidates", "impl", "precision"),
 )
 def chunk_step(
     points: jax.Array,
@@ -76,6 +78,7 @@ def chunk_step(
     tol: float = 1e-4,
     candidates: int = 3,
     impl: str = "auto",
+    precision: str = "auto",
 ) -> tuple[BigMeansState, ChunkInfo]:
     """Process one chunk P (Algorithm 3, lines 5-12)."""
     k = state.centroids.shape[0]
@@ -96,7 +99,8 @@ def chunk_step(
         lambda: state.centroids.astype(jnp.float32),
     )
     # line 8: local search
-    res = kmeans.lloyd(points, c_init, max_iters=max_iters, tol=tol, impl=impl)
+    res = kmeans.lloyd(points, c_init, max_iters=max_iters, tol=tol, impl=impl,
+                       precision=precision)
 
     # lines 9-11: keep the best (objectives of equal-size chunks compared)
     accepted = res.objective < state.f_best
@@ -140,7 +144,7 @@ def sample_chunk(
     jax.jit,
     static_argnames=(
         "k", "s", "n_chunks", "max_iters", "tol", "candidates", "impl",
-        "with_replacement",
+        "with_replacement", "precision",
     ),
 )
 def big_means(
@@ -155,10 +159,10 @@ def big_means(
     candidates: int = 3,
     impl: str = "auto",
     with_replacement: bool = True,
+    precision: str = "auto",
 ) -> tuple[BigMeansState, ChunkInfo]:
     """Sequential Big-means over an in-core dataset.  Returns (state, traces)."""
-    if X.dtype != jnp.bfloat16:
-        X = X.astype(jnp.float32)
+    X = px.cast_storage(X, precision)
     state = init_state(k, X.shape[1])
 
     def body(carry, key_i):
@@ -168,6 +172,7 @@ def big_means(
         state, info = chunk_step(
             chunk, state, kc,
             max_iters=max_iters, tol=tol, candidates=candidates, impl=impl,
+            precision=precision,
         )
         return state, info
 
@@ -232,7 +237,8 @@ def _sync_streams(states: BigMeansState) -> BigMeansState:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("max_iters", "tol", "candidates", "impl")
+    jax.jit,
+    static_argnames=("max_iters", "tol", "candidates", "impl", "precision"),
 )
 def chunk_step_batched(
     points: jax.Array,
@@ -243,6 +249,7 @@ def chunk_step_batched(
     tol: float = 1e-4,
     candidates: int = 3,
     impl: str = "auto",
+    precision: str = "auto",
 ) -> tuple[BigMeansState, ChunkInfo]:
     """Process B chunks against B incumbent streams in one fused step.
 
@@ -268,7 +275,8 @@ def chunk_step_batched(
         lambda: states.centroids.astype(jnp.float32),
     )
     res = kmeans.lloyd_batched(
-        points, c_init, max_iters=max_iters, tol=tol, impl=impl
+        points, c_init, max_iters=max_iters, tol=tol, impl=impl,
+        precision=precision,
     )
 
     accepted = res.objective < states.f_best                    # [B]
@@ -309,6 +317,7 @@ def big_means_batched(
     candidates: int = 3,
     impl: str = "auto",
     with_replacement: bool = True,
+    precision: str = "auto",
     mesh=None,
     stream_axis: str = "streams",
 ) -> tuple[BigMeansState, ChunkInfo]:
@@ -338,12 +347,12 @@ def big_means_batched(
             X, key, mesh=mesh, stream_axis=stream_axis, k=k, s=s,
             batch=batch, rounds=rounds, sync_every=sync_every,
             max_iters=max_iters, tol=tol, candidates=candidates, impl=impl,
-            with_replacement=with_replacement,
+            with_replacement=with_replacement, precision=precision,
         )
     return _big_means_batched_local(
         X, key, k=k, s=s, batch=batch, rounds=rounds, sync_every=sync_every,
         max_iters=max_iters, tol=tol, candidates=candidates, impl=impl,
-        with_replacement=with_replacement,
+        with_replacement=with_replacement, precision=precision,
     )
 
 
@@ -357,7 +366,7 @@ def _stream_keys(key, rounds: int, sync_every: int, batch: int):
 
 
 def _stream_scan(X, states, keys, *, s, max_iters, tol, candidates, impl,
-                 with_replacement, sync_fn):
+                 with_replacement, sync_fn, precision="auto"):
     """Scan ``rounds`` chunk rounds over per-stream states; ``sync_fn``
     exchanges incumbents at each sync boundary."""
 
@@ -370,6 +379,7 @@ def _stream_scan(X, states, keys, *, s, max_iters, tol, candidates, impl,
         return chunk_step_batched(
             chunks, states, kc,
             max_iters=max_iters, tol=tol, candidates=candidates, impl=impl,
+            precision=precision,
         )
 
     def round_body(states, keys_r):                 # keys_r [sync, batch, ...]
@@ -386,21 +396,20 @@ def _stream_scan(X, states, keys, *, s, max_iters, tol, candidates, impl,
     jax.jit,
     static_argnames=(
         "k", "s", "batch", "rounds", "sync_every", "max_iters", "tol",
-        "candidates", "impl", "with_replacement",
+        "candidates", "impl", "with_replacement", "precision",
     ),
 )
 def _big_means_batched_local(
     X, key, *, k, s, batch, rounds, sync_every, max_iters, tol, candidates,
-    impl, with_replacement,
+    impl, with_replacement, precision="auto",
 ):
-    if X.dtype != jnp.bfloat16:
-        X = X.astype(jnp.float32)
+    X = px.cast_storage(X, precision)
     states = broadcast_state(init_state(k, X.shape[1]), batch)
     keys = _stream_keys(key, rounds, sync_every, batch)
     states, infos = _stream_scan(
         X, states, keys, s=s, max_iters=max_iters, tol=tol,
         candidates=candidates, impl=impl, with_replacement=with_replacement,
-        sync_fn=_sync_streams,
+        sync_fn=_sync_streams, precision=precision,
     )
     return reduce_state(states), infos
 
@@ -410,16 +419,16 @@ def _big_means_batched_local(
     static_argnames=(
         "mesh", "stream_axis", "k", "s", "batch", "rounds", "sync_every",
         "max_iters", "tol", "candidates", "impl", "with_replacement",
+        "precision",
     ),
 )
 def _big_means_batched_sharded(
     X, key, *, mesh, stream_axis, k, s, batch, rounds, sync_every,
-    max_iters, tol, candidates, impl, with_replacement,
+    max_iters, tol, candidates, impl, with_replacement, precision="auto",
 ):
     ndev = mesh.shape[stream_axis]
     assert batch % ndev == 0, "stream mesh axis must divide batch"
-    if X.dtype != jnp.bfloat16:
-        X = X.astype(jnp.float32)
+    X = px.cast_storage(X, precision)
     n = X.shape[1]
     keys = _stream_keys(key, rounds, sync_every, batch)
 
@@ -444,6 +453,7 @@ def _big_means_batched_sharded(
             x_rep, states, keys_local, s=s, max_iters=max_iters, tol=tol,
             candidates=candidates, impl=impl,
             with_replacement=with_replacement, sync_fn=sync,
+            precision=precision,
         )
         local = reduce_state(states)
         f_all = jax.lax.all_gather(local.f_best, stream_axis)
@@ -499,6 +509,7 @@ def big_means_sharded(
     candidates: int = 3,
     impl: str = "auto",
     with_replacement: bool = True,
+    precision: str = "auto",
 ) -> tuple[BigMeansState, ChunkInfo]:
     """Multi-worker Big-means: X row-sharded over ``axes``; per-worker chunk
     streams with periodic incumbent exchange.
@@ -530,7 +541,7 @@ def big_means_sharded(
                 return chunk_step(
                     chunk, state, kc,
                     max_iters=max_iters, tol=tol,
-                    candidates=candidates, impl=impl,
+                    candidates=candidates, impl=impl, precision=precision,
                 )
 
             keys = jax.random.split(key_r, sync_every)
@@ -556,5 +567,5 @@ def big_means_sharded(
             ChunkInfo(*([P(axes[0])] * 4)),
         ),
     )
-    xd = X if X.dtype == jnp.bfloat16 else X.astype(jnp.float32)
+    xd = px.cast_storage(X, precision)
     return shard(xd, key)

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.kernels import precision as px
 
 
 class KMeansResult(NamedTuple):
@@ -70,7 +71,8 @@ def _advance(step_fn, s: _Carry, *, max_iters: int, tol: float,
     return _Carry(new_c, f_prev, f_curr, it, jnp.logical_and(act, keep_going))
 
 
-@functools.partial(jax.jit, static_argnames=("max_iters", "tol", "impl"))
+@functools.partial(
+    jax.jit, static_argnames=("max_iters", "tol", "impl", "precision"))
 def lloyd(
     points: jax.Array,
     init_centroids: jax.Array,
@@ -79,21 +81,26 @@ def lloyd(
     max_iters: int = 300,
     tol: float = 1e-4,
     impl: str = "auto",
+    precision: str = "auto",
 ) -> KMeansResult:
     """Run Lloyd's algorithm from ``init_centroids`` on an in-memory chunk.
 
     ``weights`` enables the weighted variant used by coreset / K-means||
     baselines (w_i multiplies both the objective and the centroid update).
+    ``precision`` sets the chunk storage / MXU element type (bf16 halves the
+    streamed bytes); centroids, the objective and the convergence test stay
+    f32.
     """
-    if points.dtype != jnp.bfloat16:
-        points = points.astype(jnp.float32)
+    precision = px.resolve(precision, points.dtype)
+    points = px.cast_storage(points, precision)
     init_centroids = init_centroids.astype(jnp.float32)
     k = init_centroids.shape[0]
     inf = jnp.float32(jnp.inf)
 
     def step(c):
         # single-HBM-pass fused kernel on TPU; two-pass fallback elsewhere
-        sums, counts, f = ops.fused_step(points, c, weights=weights, impl=impl)
+        sums, counts, f = ops.fused_step(points, c, weights=weights, impl=impl,
+                                         precision=precision)
         new_c = jnp.where(counts[:, None] > 0, sums / counts[:, None], c)
         return new_c, f
 
@@ -107,9 +114,16 @@ def lloyd(
 
     # One last assignment against the final centroids: exact f(C, P), final
     # cluster sizes and the degeneracy mask (counts are those of the *final*
-    # centroids, which is what Big-means' re-seeding needs).
-    ids, d = ops.assign(points, final.centroids, impl=impl)
-    _, counts = ops.update(points, ids, k, weights=weights, impl=impl)
+    # centroids, which is what Big-means' re-seeding needs).  This objective
+    # is what f_best acceptance compares, so its contractions run f32 even
+    # under bf16 storage (the upcast is exact): bf16 dots in
+    # ||x||^2 - 2x.c + ||c||^2 cancel catastrophically for points near their
+    # centroid and the clamp at 0 turns that into a one-sided low bias.
+    eval_prec = "f32" if precision == "bf16" else precision
+    ids, d = ops.assign(points, final.centroids, impl=impl,
+                        precision=eval_prec)
+    _, counts = ops.update(points, ids, k, weights=weights, impl=impl,
+                           precision=precision)
     f = jnp.sum(d * weights) if weights is not None else jnp.sum(d)
     return KMeansResult(
         centroids=final.centroids,
@@ -121,7 +135,8 @@ def lloyd(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("max_iters", "tol", "impl"))
+@functools.partial(
+    jax.jit, static_argnames=("max_iters", "tol", "impl", "precision"))
 def lloyd_batched(
     points: jax.Array,
     init_centroids: jax.Array,
@@ -129,6 +144,7 @@ def lloyd_batched(
     max_iters: int = 300,
     tol: float = 1e-4,
     impl: str = "auto",
+    precision: str = "auto",
 ) -> KMeansResult:
     """B concurrent Lloyd searches: ``points`` [B, s, n], ``init`` [B, k, n].
 
@@ -138,14 +154,15 @@ def lloyd_batched(
     loop runs until the slowest stream converges.  One fused-kernel launch
     advances all streams per iteration.
     """
-    if points.dtype != jnp.bfloat16:
-        points = points.astype(jnp.float32)
+    precision = px.resolve(precision, points.dtype)
+    points = px.cast_storage(points, precision)
     init_centroids = init_centroids.astype(jnp.float32)
     batch, k = init_centroids.shape[0], init_centroids.shape[1]
     inf = jnp.full((batch,), jnp.inf, jnp.float32)
 
     def step(c):
-        sums, counts, f = ops.fused_step_batched(points, c, impl=impl)
+        sums, counts, f = ops.fused_step_batched(points, c, impl=impl,
+                                                 precision=precision)
         new_c = jnp.where(counts[..., None] > 0, sums / counts[..., None], c)
         return new_c, f                          # [B, k, n], [B]
 
@@ -166,10 +183,14 @@ def lloyd_batched(
     if eff.startswith("pallas"):
         eff = "ref"
 
+    # Same f32 objective epilogue as `lloyd` (see comment there): the
+    # accepting f(C, P) never pays bf16 cancellation.
+    eval_prec = "f32" if precision == "bf16" else precision
+
     def _finalize(xc):
         x, c = xc
-        ids_b, d_b = ops.assign(x, c, impl=eff)
-        counts_b = ops.update(x, ids_b, k, impl=eff)[1]
+        ids_b, d_b = ops.assign(x, c, impl=eff, precision=eval_prec)
+        counts_b = ops.update(x, ids_b, k, impl=eff, precision=precision)[1]
         return ids_b, jnp.sum(d_b), counts_b
 
     ids, f, counts = jax.lax.map(_finalize, (points, final.centroids))

@@ -8,7 +8,16 @@ features) into VMEM blocks and keeps a running (min, argmin) accumulator in
 VMEM scratch across centroid tiles, accumulating the dot product across
 feature tiles.
 
+Mixed precision (``precision='bf16'``): x and c are streamed bf16 — half the
+HBM bytes of the bandwidth-bound hot loop — and the MXU contracts bf16
+operands; the dot accumulator, ``||x||^2`` / ``||c||^2`` and the reported
+distances stay f32 (``preferred_element_type``), so near-tie argmins are
+decided on f32 scores.  ``'bf16x3'`` keeps f32 storage and splits each
+operand into hi/lo bf16 halves for three compensated MXU products.
+
 Grid: (point_tiles, centroid_tiles, feature_tiles), features innermost.
+Block sizes default to the module constants; ``repro.kernels.ops`` overrides
+them with autotuned tilings (``repro.kernels.autotune``).
 """
 from __future__ import annotations
 
@@ -19,12 +28,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import precision as px
+
 _NEG_INIT = 1e30  # large finite sentinel (avoids inf-inf traps in padding)
 
 
 def _assign_kernel(
-    x_ref,       # [bm, bf] f32
-    c_ref,       # [bk, bf] f32
+    x_ref,       # [bm, bf] storage dtype (f32 or bf16)
+    c_ref,       # [bk, bf] storage dtype
     csq_ref,     # [1, bk]  f32 (padded centroids hold _NEG_INIT)
     id_ref,      # out [bm, 1] int32
     d_ref,       # out [bm, 1] f32
@@ -34,6 +45,7 @@ def _assign_kernel(
     arg_ref,     # scratch [bm, 1] int32
     *,
     block_k: int,
+    precision: str,
 ):
     j = pl.program_id(1)
     l = pl.program_id(2)
@@ -52,13 +64,11 @@ def _assign_kernel(
 
     x = x_ref[...]
     c = c_ref[...]
-    acc_ref[...] += jax.lax.dot_general(
-        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )
+    acc_ref[...] += px.dot(x, c, (((1,), (1,)), ((), ())), precision)
 
     @pl.when(j == 0)
     def _accum_xsq():
-        xsq_ref[...] += jnp.sum(x * x, axis=1, keepdims=True)
+        xsq_ref[...] += px.sqnorm(x, axis=1, keepdims=True)
 
     @pl.when(l == num_f - 1)
     def _reduce_k_tile():
@@ -86,7 +96,8 @@ def _pad_to(a: jax.Array, size: int, axis: int, value=0.0) -> jax.Array:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_m", "block_k", "block_f", "interpret")
+    jax.jit,
+    static_argnames=("block_m", "block_k", "block_f", "precision", "interpret"),
 )
 def assign_pallas(
     x: jax.Array,
@@ -95,28 +106,33 @@ def assign_pallas(
     block_m: int = 256,
     block_k: int = 128,
     block_f: int = 256,
+    precision: str = "f32",
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Pallas nearest-centroid assignment.  x [m,n], c [k,n] -> (ids, sqdist)."""
     m, n = x.shape
     k, n2 = c.shape
     assert n == n2, (x.shape, c.shape)
-    x = x.astype(jnp.float32)
-    c = c.astype(jnp.float32)
+    px.check(precision)
+    # ||c||^2 in f32 from the full-width view, *before* any storage cast.
+    csq = px.sqnorm(c)
+    store = px.storage_dtype(precision)
+    x = x.astype(store)
+    c = c.astype(store)
 
     block_m = min(block_m, max(8, m))
     bm = -(-m // block_m) * block_m
     bk = -(-k // block_k) * block_k
     bf = -(-n // block_f) * block_f
 
-    csq = jnp.sum(c * c, axis=-1)                          # true ||c||^2
     xp = _pad_to(_pad_to(x, bm, 0), bf, 1)
     cp = _pad_to(_pad_to(c, bk, 0), bf, 1)
     csqp = _pad_to(csq[None, :], bk, 1, value=_NEG_INIT)   # padded c never wins
 
     grid = (bm // block_m, bk // block_k, bf // block_f)
     ids, d = pl.pallas_call(
-        functools.partial(_assign_kernel, block_k=block_k),
+        functools.partial(_assign_kernel, block_k=block_k,
+                          precision=precision),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_m, block_f), lambda i, j, l: (i, l)),

@@ -12,17 +12,30 @@ tile resident in VMEM:
 
 halving the dominant HBM traffic of Big-means' inner loop.
 
+Mixed precision (``precision='bf16'``): the chunk and centroids are stored
+and streamed bf16 — halving the remaining HBM bytes again — and both MXU
+contractions take bf16 operands.  Everything that decides or accumulates is
+f32: the score accumulator (``preferred_element_type``), ``||c||^2`` /
+``||x||^2`` (computed from the full-width view before the storage cast),
+sums, counts and the objective.  ``'bf16x3'`` keeps f32 storage and runs
+each contraction as three compensated bf16 products (near-f32 numerics at
+bf16 MXU rates; no bandwidth change).
+
 Two variants:
 
 * :func:`fused_step_pallas` — single chunk, paper-regime envelope
   (k <= 128: one lane tile; n <= 1024: feature block fits VMEM).
 * :func:`fused_step_batched_pallas` — a leading batch-grid dimension runs B
   independent chunk streams in one launch, and the kernel tiles k (lane
-  tiles of 128 with a running argmin across tiles) and n (contraction
-  tiles) internally, widening the envelope to :func:`fits_batched`.
+  tiles of ``block_k`` with a running argmin across tiles) and n
+  (contraction tiles) internally, widening the envelope to
+  :func:`fits_batched`.
 
 ``ops.fused_step`` / ``ops.fused_step_batched`` fall back to the two-pass
-path outside the envelope or when point weights are used.
+path outside the envelope or when point weights are used.  Block sizes
+default to the module constants; ``ops`` overrides them with autotuned
+tilings (``repro.kernels.autotune``) — tile choice is perf-only and never
+changes results.
 """
 from __future__ import annotations
 
@@ -31,6 +44,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import precision as px
 
 _BIG = 1e30
 
@@ -48,7 +63,7 @@ _BLOCK_N = 512                 # contraction tile for the distance matmul
 
 
 def _fused_kernel(x_ref, c_ref, csq_ref, sums_ref, counts_ref, obj_ref, *,
-                  m: int, block_m: int):
+                  m: int, block_m: int, precision: str):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -59,11 +74,10 @@ def _fused_kernel(x_ref, c_ref, csq_ref, sums_ref, counts_ref, obj_ref, *,
 
     x = x_ref[...]                                           # [bm, n_pad]
     c = c_ref[...]                                           # [k_pad, n_pad]
-    scores = csq_ref[...] - 2.0 * jax.lax.dot_general(
-        x, c, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)                  # [bm, k_pad]
+    scores = csq_ref[...] - 2.0 * px.dot(
+        x, c, (((1,), (1,)), ((), ())), precision)           # [bm, k_pad] f32
     idx = jnp.argmin(scores, axis=1).astype(jnp.int32)       # [bm]
-    xsq = jnp.sum(x * x, axis=1)                             # [bm]
+    xsq = px.sqnorm(x, axis=1)                               # [bm] f32
     mind = jnp.maximum(jnp.min(scores, axis=1) + xsq, 0.0)
 
     rows = i * block_m + jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], 1), 0)
@@ -71,9 +85,8 @@ def _fused_kernel(x_ref, c_ref, csq_ref, sums_ref, counts_ref, obj_ref, *,
     lanes = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], c.shape[0]), 1)
     onehot = (idx[:, None] == lanes).astype(jnp.float32) * valid
 
-    sums_ref[...] += jax.lax.dot_general(
-        onehot, x, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)                  # [k_pad, n_pad]
+    sums_ref[...] += px.dot(
+        onehot, x, (((0,), (0,)), ((), ())), precision)      # [k_pad, n_pad]
     counts_ref[...] += jnp.sum(onehot, axis=0, keepdims=True)
     obj_ref[...] += jnp.sum(mind[:, None] * valid, keepdims=True)[0:1, 0:1]
 
@@ -91,35 +104,43 @@ def fits(k: int, n: int) -> bool:
     return k <= MAX_K and n <= MAX_N
 
 
-def _batched_tiles(k: int, n: int) -> tuple[int, int, int]:
-    """(k_pad, n_pad, block_n) used by the batched kernel for this shape."""
-    k_pad = -(-k // _BLOCK_K) * _BLOCK_K
+def _batched_tiles(k: int, n: int, block_k: int | None = None,
+                   block_n: int | None = None) -> tuple[int, int, int, int]:
+    """(k_pad, n_pad, block_k, block_n) used by the batched kernel."""
+    block_k = _BLOCK_K if block_k is None else block_k
+    k_pad = -(-k // block_k) * block_k
     n_pad = -(-n // 128) * 128
-    block_n = n_pad if n_pad <= _BLOCK_N else _BLOCK_N
+    if block_n is None:
+        block_n = n_pad if n_pad <= _BLOCK_N else _BLOCK_N
     n_pad = -(-n_pad // block_n) * block_n
-    return k_pad, n_pad, block_n
+    return k_pad, n_pad, block_k, block_n
 
 
 def fits_batched(k: int, n: int) -> bool:
-    k_pad, n_pad, _ = _batched_tiles(k, n)
+    k_pad, n_pad, _, _ = _batched_tiles(k, n)
     return (k <= MAX_K_BATCHED and n <= MAX_N_BATCHED
             and k_pad * n_pad <= _MAX_KN_ELEMS)
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "precision", "interpret"))
 def fused_step_pallas(
     x: jax.Array,
     c: jax.Array,
     *,
     block_m: int = 256,
+    precision: str = "f32",
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """x [m,n], c [k,n] -> (sums f32 [k,n], counts f32 [k], obj f32 scalar)."""
     m, n = x.shape
     k = c.shape[0]
     assert fits(k, n), (k, n)
-    x = x.astype(jnp.float32)
-    c = c.astype(jnp.float32)
+    px.check(precision)
+    csq = px.sqnorm(c)                      # f32, from the full-width view
+    store = px.storage_dtype(precision)
+    x = x.astype(store)
+    c = c.astype(store)
 
     block_m = min(block_m, max(8, m))
     bm = -(-m // block_m) * block_m
@@ -128,10 +149,11 @@ def fused_step_pallas(
 
     xp = _pad_to(_pad_to(x, bm, 0), n_pad, 1)
     cp = _pad_to(_pad_to(c, k_pad, 0), n_pad, 1)
-    csq = _pad_to(jnp.sum(c * c, axis=-1)[None, :], k_pad, 1, value=_BIG)
+    csqp = _pad_to(csq[None, :], k_pad, 1, value=_BIG)
 
     sums, counts, obj = pl.pallas_call(
-        functools.partial(_fused_kernel, m=m, block_m=block_m),
+        functools.partial(_fused_kernel, m=m, block_m=block_m,
+                          precision=precision),
         grid=(bm // block_m,),
         in_specs=[
             pl.BlockSpec((block_m, n_pad), lambda i: (i, 0)),
@@ -149,13 +171,13 @@ def fused_step_pallas(
             jax.ShapeDtypeStruct((1, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(xp, cp, csq)
+    )(xp, cp, csqp)
     return sums[:k, :n], counts[0, :k], obj[0, 0]
 
 
 def _fused_batched_kernel(x_ref, c_ref, csq_ref, sums_ref, counts_ref,
                           obj_ref, *, m: int, block_m: int, block_k: int,
-                          block_n: int):
+                          block_n: int, precision: str):
     """One (batch, point-tile) grid cell of the batched fused step.
 
     k is processed in ``block_k`` lane tiles with a running (min, argmin)
@@ -184,9 +206,8 @@ def _fused_batched_kernel(x_ref, c_ref, csq_ref, sums_ref, counts_ref,
         dots = jnp.zeros((bm, block_k), jnp.float32)
         for t in range(nn):
             sl = slice(t * block_n, (t + 1) * block_n)
-            dots += jax.lax.dot_general(
-                x[:, sl], ct[:, sl], (((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32)
+            dots += px.dot(x[:, sl], ct[:, sl], (((1,), (1,)), ((), ())),
+                           precision)
         sc = csq[0:1, j * block_k:(j + 1) * block_k] - 2.0 * dots
         tmin = jnp.min(sc, axis=1)
         targ = jnp.argmin(sc, axis=1).astype(jnp.int32) + j * block_k
@@ -194,7 +215,7 @@ def _fused_batched_kernel(x_ref, c_ref, csq_ref, sums_ref, counts_ref,
         best = jnp.where(take, tmin, best)
         bidx = jnp.where(take, targ, bidx)
 
-    xsq = jnp.sum(x * x, axis=1)
+    xsq = px.sqnorm(x, axis=1)
     mind = jnp.maximum(best + xsq, 0.0)
     rows = i * block_m + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
     valid = (rows < m).astype(jnp.float32)                   # [bm, 1]
@@ -203,21 +224,27 @@ def _fused_batched_kernel(x_ref, c_ref, csq_ref, sums_ref, counts_ref,
         lanes = (jax.lax.broadcasted_iota(jnp.int32, (bm, block_k), 1)
                  + j * block_k)
         onehot = (bidx[:, None] == lanes).astype(jnp.float32) * valid
-        sums_ref[0, j * block_k:(j + 1) * block_k, :] += jax.lax.dot_general(
-            onehot, x, (((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+        sums_ref[0, j * block_k:(j + 1) * block_k, :] += px.dot(
+            onehot, x, (((0,), (0,)), ((), ())), precision)
         counts_ref[0, :, j * block_k:(j + 1) * block_k] += jnp.sum(
             onehot, axis=0, keepdims=True)
     obj_ref[...] += jnp.sum(
         mind[:, None] * valid, keepdims=True)[0:1, 0:1].reshape(1, 1, 1)
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_k", "block_n", "precision",
+                     "interpret"),
+)
 def fused_step_batched_pallas(
     x: jax.Array,
     c: jax.Array,
     *,
     block_m: int = 256,
+    block_k: int | None = None,
+    block_n: int | None = None,
+    precision: str = "f32",
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """x [B,m,n], c [B,k,n] -> (sums [B,k,n], counts [B,k], obj [B]).
@@ -229,21 +256,24 @@ def fused_step_batched_pallas(
     batch, m, n = x.shape
     k = c.shape[1]
     assert fits_batched(k, n), (k, n)
-    x = x.astype(jnp.float32)
-    c = c.astype(jnp.float32)
+    px.check(precision)
+    csq = px.sqnorm(c)                      # [B, k] f32, pre-cast view
+    store = px.storage_dtype(precision)
+    x = x.astype(store)
+    c = c.astype(store)
 
     block_m = min(block_m, max(8, m))
     bm = -(-m // block_m) * block_m
-    block_k = _BLOCK_K
-    k_pad, n_pad, block_n = _batched_tiles(k, n)
+    k_pad, n_pad, block_k, block_n = _batched_tiles(k, n, block_k, block_n)
 
     xp = _pad_to(_pad_to(x, bm, 1), n_pad, 2)
     cp = _pad_to(_pad_to(c, k_pad, 1), n_pad, 2)
-    csq = _pad_to(jnp.sum(c * c, axis=-1)[:, None, :], k_pad, 2, value=_BIG)
+    csqp = _pad_to(csq[:, None, :], k_pad, 2, value=_BIG)
 
     sums, counts, obj = pl.pallas_call(
         functools.partial(_fused_batched_kernel, m=m, block_m=block_m,
-                          block_k=block_k, block_n=block_n),
+                          block_k=block_k, block_n=block_n,
+                          precision=precision),
         grid=(batch, bm // block_m),
         in_specs=[
             pl.BlockSpec((1, block_m, n_pad), lambda b, i: (b, i, 0)),
@@ -261,5 +291,5 @@ def fused_step_batched_pallas(
             jax.ShapeDtypeStruct((batch, 1, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(xp, cp, csq)
+    )(xp, cp, csqp)
     return sums[:, :k, :n], counts[:, 0, :k], obj[:, 0, 0]

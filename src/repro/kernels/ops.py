@@ -12,6 +12,16 @@ there in interpret mode, which we reserve for tests).  Every wrapper accepts
 * ``'ref'``               — single-shot jnp oracle
 * ``'ref_chunked'``       — jnp oracle, lax.map over point blocks (bounds the
                             [m,k] distance-matrix working set for big m)
+
+Every wrapper also takes ``precision`` (``'auto'`` | ``'f32'`` | ``'bf16'``
+| ``'bf16x3'``, see :mod:`repro.kernels.precision`): the storage/MXU element
+type of the point stream (``'auto'`` follows the data dtype).  Accumulators,
+norms and the objective are always f32, so the knob trades bytes/FLOP
+precision without touching acceptance semantics.
+
+Pallas launches consult :mod:`repro.kernels.autotune` for their tile sizes
+(keyed by backend, batch, shape and precision) instead of hardcoded module
+constants; with tuning disabled this returns the historical defaults.
 """
 from __future__ import annotations
 
@@ -20,11 +30,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import autotune, ref
+from repro.kernels import precision as px
 from repro.kernels.distance import assign_pallas
 from repro.kernels.update import update_pallas
 
 IMPLS = ("pallas", "pallas_interpret", "ref", "ref_chunked")
+PRECISIONS = px.PRECISIONS
 
 _DEFAULT_IMPL: str | None = None    # explicit override; None = auto-detect
 
@@ -60,36 +72,63 @@ def resolve_impl(impl: str | None = "auto") -> str:
     return impl
 
 
+def _tune_backend(impl: str) -> str:
+    """Autotune cache partition: interpret timings never leak into compiled
+    entries (and vice versa)."""
+    return "interpret" if impl == "pallas_interpret" else jax.default_backend()
+
+
+def _bench(x, factory):
+    """The autotune bench factory, or None inside a jit trace.
+
+    Most call sites sit under ``jax.jit`` (lloyd, the drivers), where the
+    operands are tracers: timing there would measure trace time and block
+    on abstract values.  The tuner then falls back to cached winners /
+    defaults; eager warm-up (``repro.api.fit`` pre-tunes with concrete
+    arrays) is what populates the cache.
+    """
+    return None if isinstance(x, jax.core.Tracer) else factory
+
+
 def assign(
     x: jax.Array,
     c: jax.Array,
     *,
     impl: str = "auto",
+    precision: str = "auto",
     chunk: int = 65536,
 ) -> tuple[jax.Array, jax.Array]:
     """Nearest-centroid assignment.  x [m,n], c [k,n] -> (ids i32 [m], d f32 [m])."""
     impl = resolve_impl(impl)
-    if impl == "pallas":
-        return assign_pallas(x, c)
-    if impl == "pallas_interpret":
-        return assign_pallas(x, c, interpret=True)
+    precision = px.resolve(precision, x.dtype)
+    if impl in ("pallas", "pallas_interpret"):
+        interp = impl == "pallas_interpret"
+        blocks = autotune.get_blocks(
+            "assign",
+            _bench(x, lambda blk: lambda: jax.block_until_ready(assign_pallas(
+                x, c, precision=precision, interpret=interp, **blk))),
+            backend=_tune_backend(impl), b=1, m=x.shape[0], k=c.shape[0],
+            n=x.shape[1], precision=precision)
+        return assign_pallas(x, c, precision=precision, interpret=interp,
+                             **blocks)
     if impl == "ref":
-        return ref.assign_ref(x, c)
+        return ref.assign_ref(x, c, precision=precision)
     if impl == "ref_chunked":
-        return _assign_chunked(x, c, chunk=chunk)
+        return _assign_chunked(x, c, chunk=chunk, precision=precision)
     raise ValueError(f"unknown impl {impl!r}")
 
 
-@functools.partial(jax.jit, static_argnames=("chunk",))
-def _assign_chunked(x, c, *, chunk):
+@functools.partial(jax.jit, static_argnames=("chunk", "precision"))
+def _assign_chunked(x, c, *, chunk, precision="f32"):
     m = x.shape[0]
     if m <= chunk:
-        return ref.assign_ref(x, c)
+        return ref.assign_ref(x, c, precision=precision)
     nblk = -(-m // chunk)
     pad = nblk * chunk - m
     xp = jnp.pad(x, ((0, pad), (0, 0)))
     xb = xp.reshape(nblk, chunk, x.shape[1])
-    ids, d = jax.lax.map(lambda xi: ref.assign_ref(xi, c), xb)
+    ids, d = jax.lax.map(
+        lambda xi: ref.assign_ref(xi, c, precision=precision), xb)
     return ids.reshape(-1)[:m], d.reshape(-1)[:m]
 
 
@@ -100,18 +139,20 @@ def update(
     *,
     weights: jax.Array | None = None,
     impl: str = "auto",
+    precision: str = "auto",
 ) -> tuple[jax.Array, jax.Array]:
     """Cluster sums/counts.  x [m,n], ids [m] -> (sums [k,n], counts [k])."""
     impl = resolve_impl(impl)
+    precision = px.resolve(precision, x.dtype)
     if weights is not None:
         # Weighted path stays on the jnp oracle (cold path: coresets, K-means||).
-        return ref.update_ref(x, ids, k, weights)
+        return ref.update_ref(x, ids, k, weights, precision=precision)
     if impl == "pallas":
-        return update_pallas(x, ids, k)
+        return update_pallas(x, ids, k, precision=precision)
     if impl == "pallas_interpret":
-        return update_pallas(x, ids, k, interpret=True)
+        return update_pallas(x, ids, k, precision=precision, interpret=True)
     if impl in ("ref", "ref_chunked"):
-        return ref.update_ref(x, ids, k)
+        return ref.update_ref(x, ids, k, precision=precision)
     raise ValueError(f"unknown impl {impl!r}")
 
 
@@ -121,10 +162,12 @@ def assign_and_update(
     *,
     weights: jax.Array | None = None,
     impl: str = "auto",
+    precision: str = "auto",
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """One fused Lloyd step's statistics: (ids, d, sums, counts)."""
-    ids, d = assign(x, c, impl=impl)
-    sums, counts = update(x, ids, c.shape[0], weights=weights, impl=impl)
+    ids, d = assign(x, c, impl=impl, precision=precision)
+    sums, counts = update(x, ids, c.shape[0], weights=weights, impl=impl,
+                          precision=precision)
     return ids, d, sums, counts
 
 
@@ -134,6 +177,7 @@ def fused_step(
     *,
     weights: jax.Array | None = None,
     impl: str = "auto",
+    precision: str = "auto",
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One Lloyd iteration's (sums, counts, objective) — single-HBM-pass
     Pallas kernel when the (k, n) envelope fits, two-pass fallback
@@ -141,20 +185,34 @@ def fused_step(
     from repro.kernels import fused_step as fused
 
     impl = resolve_impl(impl)
+    precision = px.resolve(precision, x.dtype)
     k, n = c.shape[0], c.shape[1]
     if weights is None and fused.fits(k, n):
-        if impl == "pallas":
-            return fused.fused_step_pallas(x, c)
-        if impl == "pallas_interpret":
-            return fused.fused_step_pallas(x, c, interpret=True)
-    ids, d = assign(x, c, impl=impl if impl.startswith("ref") else "ref")
-    sums, counts = update(x, ids, k, weights=weights, impl="ref")
+        if impl in ("pallas", "pallas_interpret"):
+            interp = impl == "pallas_interpret"
+            blocks = autotune.get_blocks(
+                "fused",
+                _bench(x, lambda blk: lambda: jax.block_until_ready(
+                    fused.fused_step_pallas(
+                        x, c, precision=precision, interpret=interp, **blk))),
+                backend=_tune_backend(impl), b=1, m=x.shape[0], k=k, n=n,
+                precision=precision)
+            return fused.fused_step_pallas(
+                x, c, precision=precision, interpret=interp, **blocks)
+    # Two-pass fallback (non-fused impls, weighted steps, or an envelope
+    # miss).  Explicit ref impls are honored as-is — in particular
+    # 'ref_chunked' keeps its bounded [chunk, k] distance working set for
+    # big m — while the Pallas impls fall back to the plain oracle.
+    fallback = impl if impl.startswith("ref") else "ref"
+    ids, d = assign(x, c, impl=fallback, precision=precision)
+    sums, counts = update(x, ids, k, weights=weights, impl=fallback,
+                          precision=precision)
     obj = jnp.sum(d * weights) if weights is not None else jnp.sum(d)
     return sums, counts, obj
 
 
-@jax.jit
-def _fused_step_batched_ref(x, c):
+@functools.partial(jax.jit, static_argnames=("precision",))
+def _fused_step_batched_ref(x, c, *, precision="f32"):
     """Batched two-pass oracle.
 
     ``lax.map`` over streams, not ``vmap``: the math per stream is
@@ -166,8 +224,9 @@ def _fused_step_batched_ref(x, c):
 
     def one(xc):
         xb, cb = xc
-        ids, d = ref.assign_ref(xb, cb)
-        sums, counts = ref.update_ref(xb, ids, cb.shape[0])
+        ids, d = ref.assign_ref(xb, cb, precision=precision)
+        sums, counts = ref.update_ref(xb, ids, cb.shape[0],
+                                      precision=precision)
         return sums, counts, jnp.sum(d)
 
     return jax.lax.map(one, (x, c))
@@ -178,20 +237,34 @@ def fused_step_batched(
     c: jax.Array,
     *,
     impl: str = "auto",
+    precision: str = "auto",
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """B concurrent Lloyd iterations in one launch.
 
     x [B,m,n], c [B,k,n] -> (sums [B,k,n], counts [B,k], obj [B]).  Routes
     to the batched fused Pallas kernel inside its (wider, k/n-tiled)
-    envelope; falls back to the vmapped two-pass jnp oracle elsewhere.
+    envelope; falls back to :func:`_fused_step_batched_ref` elsewhere — a
+    ``lax.map`` (not ``vmap``) over the two-pass jnp oracle, which keeps
+    each stream's [m, k] distance working set cache-resident on CPU (the
+    vmapped [B, m, k] intermediates measured ~2.5x slower at paper-scale
+    chunks; see its docstring).
     """
     from repro.kernels import fused_step as fused
 
     impl = resolve_impl(impl)
+    precision = px.resolve(precision, x.dtype)
+    batch, m = x.shape[0], x.shape[1]
     k, n = c.shape[1], c.shape[2]
     if fused.fits_batched(k, n):
-        if impl == "pallas":
-            return fused.fused_step_batched_pallas(x, c)
-        if impl == "pallas_interpret":
-            return fused.fused_step_batched_pallas(x, c, interpret=True)
-    return _fused_step_batched_ref(x, c)
+        if impl in ("pallas", "pallas_interpret"):
+            interp = impl == "pallas_interpret"
+            blocks = autotune.get_blocks(
+                "fused_batched",
+                _bench(x, lambda blk: lambda: jax.block_until_ready(
+                    fused.fused_step_batched_pallas(
+                        x, c, precision=precision, interpret=interp, **blk))),
+                backend=_tune_backend(impl), b=batch, m=m, k=k, n=n,
+                precision=precision)
+            return fused.fused_step_batched_pallas(
+                x, c, precision=precision, interpret=interp, **blocks)
+    return _fused_step_batched_ref(x, c, precision=precision)

@@ -1,0 +1,116 @@
+"""Mixed-precision policy for the K-means kernel stack.
+
+One ``precision`` knob is threaded through every kernel, oracle and driver:
+
+* ``'f32'``    — everything float32 (the historical behaviour).
+* ``'bf16'``   — inputs are *stored and streamed* as bfloat16 (half the HBM /
+  host->device bytes of the bandwidth-bound chunk loop) and the distance /
+  update contractions run bf16 x bf16 on the MXU.  Everything that decides
+  or compares — accumulators, ``||c||^2`` / ``||x||^2`` norms, the objective,
+  centroid updates, ``f_best`` acceptance — stays float32 via
+  ``preferred_element_type``.
+* ``'bf16x3'`` — compensated compute: operands stay f32 in storage and every
+  contraction is decomposed into three bf16 products
+  (``a.b ~= hi_a.hi_b + hi_a.lo_b + lo_a.hi_b`` with ``hi = bf16(a)``,
+  ``lo = bf16(a - hi)``), recovering near-f32 accuracy at bf16 MXU rates.
+  No bandwidth saving — it is a compute-precision option, used e.g. for the
+  objective epilogue when bf16 rounding of f(C, X) itself is the concern.
+
+The helpers here are pure jnp/lax so they are usable both from the jnp
+oracles and *inside* Pallas kernel bodies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PRECISIONS = ("f32", "bf16", "bf16x3")
+
+
+def check(precision: str) -> str:
+    """Validate and return a *concrete* ``precision``."""
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown precision {precision!r}; known: {PRECISIONS}")
+    return precision
+
+
+def from_dtype(dtype) -> str:
+    """The precision a raw array dtype implies (dtype-driven ``'auto'``)."""
+    return "bf16" if dtype == jnp.bfloat16 else "f32"
+
+
+def resolve(precision: str | None, dtype) -> str:
+    """Resolve a precision knob against the data dtype.
+
+    ``'auto'`` / ``None`` follow the data (bf16 arrays contract in bf16, the
+    historical behaviour; everything else is f32); concrete values are
+    authoritative — ``'f32'`` up-casts bf16 data to full width, ``'bf16'``
+    down-casts f32 storage.
+    """
+    if precision is None or precision == "auto":
+        return from_dtype(dtype)
+    return check(precision)
+
+
+def storage_dtype(precision: str):
+    """The dtype chunk data is stored/streamed in under a concrete policy."""
+    check(precision)
+    return jnp.bfloat16 if precision == "bf16" else jnp.float32
+
+
+def cast_storage(x: jax.Array, precision: str | None) -> jax.Array:
+    """Cast an array to its storage dtype under ``precision`` (auto-aware)."""
+    return x.astype(storage_dtype(resolve(precision, x.dtype)))
+
+
+def host_dtype(precision: str | None):
+    """The NumPy dtype a host-side chunk cast should request, or ``None``.
+
+    ``'bf16'`` asks for ``ml_dtypes.bfloat16`` (a jax dependency;
+    ``jax.device_put`` of such an array yields a device bf16 buffer with no
+    further conversion) so the cast happens on the host and host->device
+    transfers move half the bytes.  Every other policy returns ``None`` —
+    "no explicit request", letting each data source serve its native
+    dtype.
+    """
+    if precision == "bf16":
+        import ml_dtypes
+        import numpy as np
+
+        return np.dtype(ml_dtypes.bfloat16)
+    return None
+
+
+def _split_bf16(a: jax.Array) -> tuple[jax.Array, jax.Array]:
+    hi = a.astype(jnp.bfloat16)
+    lo = (a - hi.astype(jnp.float32)).astype(jnp.bfloat16)
+    return hi, lo
+
+
+def dot(a: jax.Array, b: jax.Array, dimension_numbers, precision: str):
+    """``lax.dot_general`` under the mixed-precision policy.
+
+    Always accumulates and returns float32 (``preferred_element_type``); the
+    knob only controls the operand element type fed to the MXU.  Under
+    ``'bf16x3'``, operands that arrive as bf16 carry no low bits, so the
+    compensation degrades gracefully to the plain bf16 product.
+    """
+    check(precision)
+    dg = lambda x, y: jax.lax.dot_general(  # noqa: E731
+        x, y, dimension_numbers, preferred_element_type=jnp.float32)
+    if precision == "f32":
+        return dg(a.astype(jnp.float32), b.astype(jnp.float32))
+    if precision == "bf16":
+        return dg(a.astype(jnp.bfloat16), b.astype(jnp.bfloat16))
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    ah, al = _split_bf16(a)
+    bh, bl = _split_bf16(b)
+    return dg(ah, bh) + dg(ah, bl) + dg(al, bh)
+
+
+def sqnorm(a: jax.Array, axis=-1, keepdims: bool = False) -> jax.Array:
+    """``sum(a*a)`` in f32 regardless of storage dtype (norms never bf16)."""
+    a = a.astype(jnp.float32)
+    return jnp.sum(a * a, axis=axis, keepdims=keepdims)

@@ -3,41 +3,46 @@
 These are the semantic ground truth: every Pallas kernel in this package has
 an ``*_ref`` twin here and tests assert allclose between the two across shape
 and dtype sweeps. They are also the production path on non-TPU backends.
+
+All oracles take a ``precision`` knob (see :mod:`repro.kernels.precision`):
+``None`` infers it from the data dtype (bf16 arrays contract in bf16, the
+historical behaviour), a concrete value forces the policy.  Accumulation —
+norms, sums, counts, objective — is always float32.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import precision as px
+
 
 def pairwise_sqdist_ref(x: jax.Array, c: jax.Array,
-                        x2: jax.Array | None = None) -> jax.Array:
+                        x2: jax.Array | None = None,
+                        *, precision: str | None = None) -> jax.Array:
     """Squared euclidean distances between rows of x [m,n] and c [k,n] -> [m,k].
 
-    Accumulation is always fp32; if the *data* arrives in bf16 the dominant
-    matmul reads it at half the bytes (mixed-precision streaming — §Perf
-    cluster cell).  ``x2`` (optional [m,1]) lets callers hoist the point
+    The dominant matmul runs under the ``precision`` policy (bf16 data at
+    half the bytes, optional bf16x3 compensation); ``||x||^2`` / ``||c||^2``
+    are always f32.  ``x2`` (optional [m,1]) lets callers hoist the point
     norms out of loops that probe many candidate centroid sets (K-means++
     seeding reads the chunk once per slot instead of twice)."""
-    if x.dtype == jnp.bfloat16:
-        xd, cd = x, c.astype(jnp.bfloat16)
-    else:
-        xd, cd = x.astype(jnp.float32), c.astype(jnp.float32)
+    prec = px.from_dtype(x.dtype) if precision is None else px.check(precision)
     if x2 is None:
-        x2 = jnp.sum(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    c2 = jnp.sum(jnp.square(c.astype(jnp.float32)), axis=-1)[None, :]
-    dots = jax.lax.dot_general(
-        xd, cd, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+        x2 = px.sqnorm(x, keepdims=True)
+    c2 = px.sqnorm(c)[None, :]
+    dots = px.dot(x, c, (((1,), (1,)), ((), ())), prec)
     d = x2 - 2.0 * dots + c2
     return jnp.maximum(d, 0.0)
 
 
-def assign_ref(x: jax.Array, c: jax.Array) -> tuple[jax.Array, jax.Array]:
+def assign_ref(x: jax.Array, c: jax.Array,
+               *, precision: str | None = None) -> tuple[jax.Array, jax.Array]:
     """Nearest-centroid assignment.
 
     Returns (ids int32 [m], sq_dist f32 [m]).
     """
-    d = pairwise_sqdist_ref(x, c)
+    d = pairwise_sqdist_ref(x, c, precision=precision)
     ids = jnp.argmin(d, axis=1).astype(jnp.int32)
     mind = jnp.min(d, axis=1)
     return ids, mind
@@ -48,21 +53,22 @@ def update_ref(
     ids: jax.Array,
     k: int,
     weights: jax.Array | None = None,
+    *,
+    precision: str | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Centroid-update statistics: per-cluster feature sums and counts.
 
     Returns (sums f32 [k,n], counts f32 [k]).  ``ids`` entries outside
     [0, k) contribute nothing (used for padding).  bf16 data is read at
-    half bytes; accumulation stays fp32.
+    half bytes; accumulation stays fp32 (one-hot entries are 0/1, exactly
+    representable in bf16, so the membership operand loses nothing).
     """
-    xd = x if x.dtype == jnp.bfloat16 else x.astype(jnp.float32)
-    onehot = jax.nn.one_hot(ids, k, dtype=xd.dtype)        # [m,k]; oob -> 0s
+    prec = px.from_dtype(x.dtype) if precision is None else px.check(precision)
+    onehot = jax.nn.one_hot(ids, k, dtype=jnp.float32)     # [m,k]; oob -> 0s
     if weights is not None:
-        onehot = onehot * weights.astype(onehot.dtype)[:, None]
-    sums = jax.lax.dot_general(
-        onehot, xd, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)                # [k,n]
-    counts = jnp.sum(onehot.astype(jnp.float32), axis=0)   # [k]
+        onehot = onehot * weights.astype(jnp.float32)[:, None]
+    sums = px.dot(onehot, x, (((0,), (0,)), ((), ())), prec)  # [k,n] f32
+    counts = jnp.sum(onehot, axis=0)                          # [k]
     return sums, counts
 
 

@@ -9,6 +9,11 @@ it against the point tile on the MXU:
 
 Grid: (centroid_tiles, feature_tiles, point_tiles), points innermost, so the
 output block stays resident in VMEM while the point stream flows through.
+
+Mixed precision (``precision='bf16'``): the point stream is read as bf16
+(half the HBM bytes) and the membership contraction runs bf16 on the MXU —
+one-hot entries are 0/1, exactly representable — while sums and counts
+accumulate f32.
 """
 from __future__ import annotations
 
@@ -18,14 +23,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import precision as px
+
 
 def _update_kernel(
-    x_ref,        # [bm, bf] f32
+    x_ref,        # [bm, bf] storage dtype (f32 or bf16)
     ids_ref,      # [bm, 1] int32 (padding rows hold -1)
     sums_ref,     # out [bk, bf] f32 (accumulated across point tiles)
     counts_ref,   # out [1, bk] f32
     *,
     block_k: int,
+    precision: str,
 ):
     j = pl.program_id(0)   # centroid tile
     l = pl.program_id(1)   # feature tile
@@ -44,9 +52,7 @@ def _update_kernel(
     onehot = (ids == j * block_k + lane).astype(jnp.float32)  # [bm, bk]
 
     x = x_ref[...]
-    sums_ref[...] += jax.lax.dot_general(
-        onehot, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )
+    sums_ref[...] += px.dot(onehot, x, (((0,), (0,)), ((), ())), precision)
 
     @pl.when(l == 0)
     def _accum_counts():
@@ -64,7 +70,8 @@ def _pad_to(a, size, axis, value=0):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "block_m", "block_k", "block_f", "interpret"),
+    static_argnames=("k", "block_m", "block_k", "block_f", "precision",
+                     "interpret"),
 )
 def update_pallas(
     x: jax.Array,
@@ -74,11 +81,13 @@ def update_pallas(
     block_m: int = 256,
     block_k: int = 128,
     block_f: int = 256,
+    precision: str = "f32",
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """x [m,n], ids [m] int32 -> (sums f32 [k,n], counts f32 [k])."""
     m, n = x.shape
-    x = x.astype(jnp.float32)
+    px.check(precision)
+    x = x.astype(px.storage_dtype(precision))
     ids = ids.astype(jnp.int32)
 
     block_m = min(block_m, max(8, m))
@@ -91,7 +100,8 @@ def update_pallas(
 
     grid = (bk // block_k, bf // block_f, bm // block_m)
     sums, counts = pl.pallas_call(
-        functools.partial(_update_kernel, block_k=block_k),
+        functools.partial(_update_kernel, block_k=block_k,
+                          precision=precision),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_m, block_f), lambda j, l, i: (i, l)),

@@ -1,0 +1,325 @@
+"""Mixed-precision kernel stack + block-size autotuner.
+
+Covers the ISSUE 3 acceptance matrix:
+
+* bf16 numerics: objective within rtol=1e-2 of the f32 oracle; batch=1
+  batched kernel == single kernel under bf16; padding (lanes and features)
+  never wins an argmin or leaks into sums.
+* ``fit(..., precision='bf16')`` within 1% relative ``f_best`` of the f32
+  run on the paper-regime synthetic workload (same seeds).
+* autotuner: tile choice never changes numerics; on-disk cache write +
+  reload round-trip; ops consults the tuner under ``pallas_interpret``.
+* ``ops.fused_step`` two-pass fallback honors ``impl='ref_chunked'``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, ops, ref
+from repro.kernels import precision as px
+from repro.kernels.fused_step import fused_step_batched_pallas, fused_step_pallas
+
+
+def _blobs(m=400, n=28, k=25, seed=0):
+    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
+    centers = jax.random.normal(kc, (k, n)) * 4.0
+    ids = jax.random.randint(jax.random.PRNGKey(seed + 1), (m,), 0, k)
+    x = centers[ids] + jax.random.normal(kx, (m, n)) * 0.3
+    c = centers + 0.05
+    return x, c
+
+
+# ---------------------------------------------------------------------------
+# precision policy helpers
+# ---------------------------------------------------------------------------
+
+
+def test_precision_validation():
+    with pytest.raises(ValueError, match="unknown precision"):
+        px.check("fp8")
+    assert px.check("bf16") == "bf16"
+    assert px.storage_dtype("bf16") == jnp.bfloat16
+    assert px.storage_dtype("bf16x3") == jnp.float32
+    # 'auto' follows the data dtype (legacy behaviour); concrete values win
+    assert px.resolve("auto", jnp.bfloat16) == "bf16"
+    assert px.resolve(None, jnp.float32) == "f32"
+    assert px.resolve("f32", jnp.bfloat16) == "f32"
+
+
+def test_bf16x3_compensation_beats_bf16():
+    x, c = _blobs()
+    d32 = ref.pairwise_sqdist_ref(x, c, precision="f32")
+    dbf = ref.pairwise_sqdist_ref(x, c, precision="bf16")
+    dx3 = ref.pairwise_sqdist_ref(x, c, precision="bf16x3")
+    err_bf = float(jnp.max(jnp.abs(dbf - d32)))
+    err_x3 = float(jnp.max(jnp.abs(dx3 - d32)))
+    assert err_x3 < err_bf / 4, (err_x3, err_bf)
+
+
+# ---------------------------------------------------------------------------
+# bf16 kernel numerics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,n,k", [(300, 28, 25), (257, 100, 37)])
+def test_bf16_fused_objective_close_to_f32_oracle(m, n, k):
+    # Unit-scale blobs: the per-iteration kernel objective carries raw bf16
+    # dot rounding (the compensated f32 epilogue is lloyd's, tested below),
+    # so the comparison runs where distances are not cancellation-dominated.
+    kx, kc = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (m, n))
+    c = jax.random.normal(kc, (k, n))
+    _, _, obj_bf = fused_step_pallas(x, c, precision="bf16", interpret=True)
+    ids, d = ref.assign_ref(x, c, precision="f32")
+    obj_f32 = float(jnp.sum(d))
+    np.testing.assert_allclose(float(obj_bf), obj_f32, rtol=1e-2)
+
+
+def test_bf16_lloyd_objective_close_to_f32_oracle():
+    from repro.core import kmeans
+    from repro.core.kmeanspp import kmeanspp
+
+    x, _ = _blobs(m=2000, n=12, k=6, seed=7)
+    c0 = kmeanspp(x, jax.random.PRNGKey(5), 6)
+    res32 = kmeans.lloyd(x, c0, impl="ref", precision="f32")
+    resbf = kmeans.lloyd(x, c0, impl="ref", precision="bf16")
+    np.testing.assert_allclose(float(resbf.objective), float(res32.objective),
+                               rtol=1e-2)
+
+
+@pytest.mark.parametrize("precision", ["f32", "bf16"])
+def test_batched_batch1_matches_single_kernel(precision):
+    x, c = _blobs(m=300, n=28, k=25)
+    s1, n1, o1 = fused_step_pallas(x, c, precision=precision, interpret=True)
+    sb, nb, ob = fused_step_batched_pallas(
+        x[None], c[None], precision=precision, interpret=True)
+    np.testing.assert_array_equal(np.asarray(nb[0]), np.asarray(n1))
+    np.testing.assert_allclose(np.asarray(sb[0]), np.asarray(s1),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(float(ob[0]), float(o1), rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,n,k", [(257, 29, 5), (100, 130, 129)])
+def test_bf16_padding_invariance(m, n, k):
+    """Padded lanes must never win an argmin; padded features never leak."""
+    x, c = _blobs(m, n, k, seed=3)
+    ids, d = ops.assign(x, c, impl="pallas_interpret", precision="bf16")
+    assert int(jnp.max(ids)) < k
+    assert int(jnp.min(ids)) >= 0
+    assert bool(jnp.all(d >= 0))
+    # same inputs embedded in a larger feature space padded with zeros:
+    # distances and assignments are unchanged (bf16 zero-padding is exact)
+    ids_ref, d_ref = ref.assign_ref(
+        x.astype(jnp.bfloat16), c, precision="bf16")
+    agree = np.mean(np.asarray(ids) == np.asarray(ids_ref))
+    assert agree > 0.99, agree
+    sums, counts = ops.update(x, ids, k, impl="pallas_interpret",
+                              precision="bf16")
+    assert float(jnp.sum(counts)) == m
+    # zero-feature padding in the kernel cannot contribute to sums: compare
+    # against the oracle over identical assignments
+    sums_ref, counts_ref = ref.update_ref(x.astype(jnp.bfloat16), ids, k,
+                                          precision="bf16")
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(counts_ref))
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(sums_ref),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_fit_bf16_within_1pct_of_f32():
+    """Acceptance: paper-regime synthetic workload, same seeds, <1% f_best."""
+    from repro.api import BigMeansConfig, fit, synthetic
+
+    X = synthetic.gmm_dataset(
+        synthetic.GMMSpec(m=60_000, n=20, components=25, seed=12))
+    cfg = BigMeansConfig(k=25, s=8192, n_chunks=8, impl="ref", seed=0)
+    r32 = fit(X, cfg)
+    rbf = fit(X, cfg, precision="bf16")
+    rel = abs(rbf.objective - r32.objective) / r32.objective
+    assert rel < 0.01, (r32.objective, rbf.objective, rel)
+
+
+def test_streaming_runner_serves_bf16_chunks():
+    from repro.api import BigMeansConfig, as_source, fit
+
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(20_000, 8)).astype(np.float32)
+    src = as_source(X)
+    fetch = src.provider(1024, seed=0, dtype=__import__("ml_dtypes").bfloat16)
+    chunk = fetch(0)
+    assert chunk.dtype == np.dtype(__import__("ml_dtypes").bfloat16)
+    cfg = BigMeansConfig(k=5, s=1024, n_chunks=6, impl="ref",
+                         precision="bf16", prefetch=2)
+    res = fit(src, cfg, method="streaming")
+    assert np.isfinite(res.objective)
+    assert res.n_chunks == 6
+
+
+def test_memmap_provider_explicit_dtype_wins(tmp_path):
+    from repro.api import MemmapSource
+
+    X = np.random.default_rng(2).normal(size=(200, 4)).astype(np.float64)
+    path = tmp_path / "data.npy"
+    np.save(path, X)
+    src = MemmapSource(path, dtype=np.float64)
+    assert src.provider(16)(0).dtype == np.float64          # native default
+    assert src.provider(16, dtype=np.float32)(0).dtype == np.float32
+
+
+def test_config_precision_validation():
+    from repro.api import BigMeansConfig
+
+    with pytest.raises(ValueError, match="unknown precision"):
+        BigMeansConfig(k=3, s=10, precision="fp16")
+    with pytest.raises(ValueError, match="autotune"):
+        BigMeansConfig(k=3, s=10, autotune=1)
+    cfg = BigMeansConfig(k=3, s=10, precision="bf16", autotune=True)
+    assert cfg.precision == "bf16"
+
+
+# ---------------------------------------------------------------------------
+# satellite: ops.fused_step fallback honors ref_chunked
+# ---------------------------------------------------------------------------
+
+
+def test_fused_step_fallback_honors_ref_chunked(monkeypatch):
+    x, c = _blobs(m=200, n=16, k=4)
+    seen = []
+    real_assign = ops.assign
+
+    def spy(xa, ca, **kw):
+        seen.append(kw.get("impl"))
+        return real_assign(xa, ca, **kw)
+
+    monkeypatch.setattr(ops, "assign", spy)
+    # weights force the two-pass fallback even inside the fused envelope
+    w = jnp.ones((x.shape[0],))
+    ops.fused_step(x, c, weights=w, impl="ref_chunked")
+    assert seen == ["ref_chunked"]
+    # envelope miss (k > MAX_K) also keeps the bounded-working-set path
+    seen.clear()
+    kbig = 130
+    cbig = jax.random.normal(jax.random.PRNGKey(0), (kbig, 2000))
+    xbig = jax.random.normal(jax.random.PRNGKey(1), (64, 2000))
+    ops.fused_step(xbig, cbig, impl="ref_chunked")
+    assert seen == ["ref_chunked"]
+
+
+# ---------------------------------------------------------------------------
+# autotuner
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def clean_autotune():
+    autotune.clear()
+    was_enabled, was_path = autotune.enabled(), autotune.cache_path()
+    yield
+    autotune.clear()
+    autotune.enable(was_enabled)
+    autotune.set_cache_path(was_path)
+
+
+def test_autotune_tilings_never_change_numerics(clean_autotune):
+    """Acceptance: identical (sums, counts, obj) across candidate tilings.
+
+    Integer-valued data makes every partial sum exactly representable in
+    f32, so the comparison is bitwise — any tile-dependent accumulation
+    difference would fail loudly.
+    """
+    key = jax.random.PRNGKey(0)
+    x = jax.random.randint(key, (700, 24), -8, 8).astype(jnp.float32)
+    c = jax.random.randint(jax.random.PRNGKey(1), (25, 24), -8, 8).astype(
+        jnp.float32)
+    outs = [fused_step_pallas(x, c, block_m=bm, interpret=True)
+            for bm in (128, 256, 512)]
+    for s, n, o in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(outs[0][0]))
+        np.testing.assert_array_equal(np.asarray(n), np.asarray(outs[0][1]))
+        assert float(o) == float(outs[0][2])
+
+    xb, cb = x[None], c[None]
+    outs = [fused_step_batched_pallas(xb, cb, block_m=bm, block_k=bk,
+                                      block_n=bn, interpret=True)
+            for bm, bk, bn in ((256, 128, 512), (128, 256, 256))]
+    np.testing.assert_array_equal(np.asarray(outs[0][0]),
+                                  np.asarray(outs[1][0]))
+    np.testing.assert_array_equal(np.asarray(outs[0][1]),
+                                  np.asarray(outs[1][1]))
+    np.testing.assert_array_equal(np.asarray(outs[0][2]),
+                                  np.asarray(outs[1][2]))
+
+
+def test_autotune_candidates_include_shape_derived_default(clean_autotune):
+    """Tuning must always time the tiling the un-tuned kernel would use,
+    so a cached winner can never be slower than not tuning (n=20 resolves
+    block_n=128, which the generic candidate grid does not contain)."""
+    cands = autotune.candidates("fused_batched", b=4, m=16384, k=25, n=20,
+                                precision="f32")
+    assert cands[0] == {"block_m": 256, "block_k": 128, "block_n": 128}
+
+
+def test_autotune_disabled_returns_defaults(clean_autotune):
+    autotune.enable(False)
+    blocks = autotune.get_blocks(
+        "fused", lambda blk: (lambda: None),
+        backend="interpret", b=1, m=256, k=25, n=20, precision="f32")
+    assert blocks == {"block_m": 256}
+
+
+def test_autotune_cache_roundtrip(tmp_path, clean_autotune):
+    """Cache write + reload: the winner is timed once, then served from disk."""
+    cache = tmp_path / "tune.json"
+    autotune.set_cache_path(cache)
+    autotune.enable(True)
+
+    calls = []
+
+    def bench_factory(blocks):
+        def run():
+            calls.append(dict(blocks))
+        return run
+
+    kw = dict(backend="interpret", b=1, m=256, k=25, n=20, precision="bf16")
+    first = autotune.get_blocks("fused", bench_factory, **kw)
+    assert cache.exists()
+    assert calls, "tuning should have timed candidates"
+
+    # fresh process simulation: drop the in-memory cache, keep the file
+    autotune.clear(disk=False)
+    calls.clear()
+    again = autotune.get_blocks("fused", bench_factory, **kw)
+    assert again == first
+    assert calls == [], "disk hit must not re-time"
+
+    key = autotune.cache_key("fused", **kw)
+    import json
+    entries = json.loads(cache.read_text())["entries"]
+    assert entries[key] == first
+
+
+def test_fit_with_autotune_flag(clean_autotune):
+    """cfg.autotune=True tunes for the call's duration, then restores the
+    previous enable state (no sticky process-wide surprise sweeps)."""
+    from repro.api import BigMeansConfig, fit
+
+    autotune.enable(False)
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(5_000, 8)).astype(np.float32)
+    cfg = BigMeansConfig(k=4, s=512, n_chunks=4, impl="ref", autotune=True)
+    res = fit(X, cfg)
+    assert not autotune.enabled()
+    assert np.isfinite(res.objective)
+
+
+def test_autotune_smoke_via_ops_interpret(clean_autotune):
+    """ops consults the tuner and the tuned launch matches the oracle."""
+    autotune.enable(True)
+    x, c = _blobs(m=300, n=28, k=25)
+    s_p, n_p, o_p = ops.fused_step(x, c, impl="pallas_interpret",
+                                   precision="bf16")
+    s_r, n_r, o_r = ops.fused_step(x, c, impl="ref", precision="bf16")
+    np.testing.assert_array_equal(np.asarray(n_p), np.asarray(n_r))
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_r),
+                               rtol=1e-2, atol=1e-2)
+    np.testing.assert_allclose(float(o_p), float(o_r), rtol=1e-2)
