@@ -50,8 +50,19 @@ class BigMeansConfig:
       batched host runner).
     * ``sync_every`` — rounds between incumbent exchanges (1 = collective,
       ``n_chunks`` = competitive).
+    * ``sync`` — the engine sync policy by name (``'auto'`` | ``'collective'``
+      | ``'periodic'`` | ``'competitive'``); ``'auto'``/``'periodic'`` read
+      the period from ``sync_every``, ``'competitive'`` never exchanges
+      until the final argmin-reduce (see :mod:`repro.engine.sync`).
+    * ``scheduler`` — the engine chunk scheduler (``'uniform'`` |
+      ``'competitive_s'``): ``competitive_s`` races per-stream sample sizes
+      and reallocates streams toward the winning ``s``
+      (arXiv:2403.18766; see :mod:`repro.engine.scheduler`).
+    * ``competitive_ladder`` — the sample sizes ``competitive_s`` races;
+      empty = a geometric ladder around ``s``.
     * ``mesh`` / ``mesh_axes`` / ``stream_axis`` — optional device mesh for
-      the sharded / stream-mesh drivers.
+      the sharded / stream-mesh drivers (with the streaming strategy, the
+      prefetcher feeds device-sharded chunk stacks over this mesh).
 
     Streaming runner (out-of-core data):
 
@@ -75,6 +86,9 @@ class BigMeansConfig:
     # --- parallel execution
     batch: int = 1
     sync_every: int = 1
+    sync: str = "auto"
+    scheduler: str = "uniform"
+    competitive_ladder: tuple = ()
     mesh: Any = None
     mesh_axes: tuple = ("data",)
     stream_axis: str = "streams"
@@ -128,6 +142,25 @@ class BigMeansConfig:
             if not isinstance(rung, int) or rung < self.k:
                 raise ValueError(
                     f"vns_ladder entries must be ints >= k, got {rung!r}")
+        if self.sync not in ("auto", "collective", "periodic", "competitive"):
+            raise ValueError(
+                f"unknown sync mode {self.sync!r}; known: auto, collective, "
+                "periodic, competitive")
+        from repro.engine.scheduler import list_schedulers
+
+        if self.scheduler not in list_schedulers():
+            raise ValueError(
+                f"unknown scheduler {self.scheduler!r}; known: "
+                f"{list_schedulers()}")
+        for rung in self.competitive_ladder:
+            if not isinstance(rung, int) or rung < self.k:
+                raise ValueError(
+                    f"competitive_ladder entries must be ints >= k, "
+                    f"got {rung!r}")
+        if self.scheduler == "competitive_s" and self.batch < 2:
+            raise ValueError(
+                "scheduler='competitive_s' races streams against each "
+                f"other; it needs batch >= 2, got batch={self.batch}")
 
     def replace(self, **overrides) -> "BigMeansConfig":
         """A copy with ``overrides`` applied (re-validated)."""

@@ -32,8 +32,10 @@ class FitResult:
       algorithm does not track it).
     * ``trace`` — list of trace entries; Big-means strategies log
       ``(chunk_idx, f_new, accepted)`` triples, the streaming runner logs
-      ``(chunk_id, f_best, f_new)`` checkpoints and
-      ``("fetch_error", chunk_id, "ExcType: message")`` fetch failures.
+      ``(chunk_id, f_best, f_new)`` checkpoints,
+      ``("fetch_error", chunk_id, "ExcType: message")`` fetch failures and
+      ``("budget_drop", (chunk_ids...))`` for chunks fetched but dropped
+      un-stepped at a budget stop.
     * ``checkpoint_dir`` — where the run checkpointed, if anywhere.
     * ``config`` — the :class:`repro.api.BigMeansConfig` that ran.
     * ``extras`` — strategy-specific detail (resolved auto strategy, final

@@ -1,21 +1,29 @@
 """Driver strategy registry: how a Big-means fit executes.
 
-Every strategy wraps one of the existing drivers behind the common
-``fit(config, source, key) -> FitResult`` contract:
+Every strategy is an *engine configuration* — an assembly of the
+scheduler / topology / sync-policy / middleware pieces from
+:mod:`repro.engine` — behind the common ``fit(config, source, key) ->
+FitResult`` contract:
 
-* ``sequential`` — the paper's Algorithm 3 (``core.bigmeans.big_means``).
+* ``sequential`` — the paper's Algorithm 3: single device, scalar stream
+  (``engine.incore.sequential``).
 * ``batched``    — B incumbent streams per device
-  (``big_means_batched``; with ``config.mesh`` the stream axis is sharded).
+  (``engine.incore.batched_local``; with ``config.mesh`` the stream axis is
+  sharded, ``batched_stream_mesh``).
 * ``sharded``    — multi-worker chunk streams with periodic incumbent
-  exchange (``big_means_sharded``).
-* ``streaming``  — the out-of-core host runner (``cluster.runner.run``):
-  prefetch pipeline, checkpoints, time budget, VNS ladder.
+  exchange (``engine.incore.worker_sharded``); with checkpointing or a time
+  budget the same windows run host-orchestrated
+  (``worker_sharded_rounds``) so the middleware stack composes.
+* ``streaming``  — the out-of-core host loop (``engine.stream.run_stream``):
+  prefetch pipeline, checkpoints, time budget, VNS ladder — on one device
+  or with the stream axis sharded over ``config.mesh``.
 * ``auto``       — picks one of the above from the config + data source +
   hardware topology.
 
 Strategies are registered by name so follow-up work (competitive sample-size
-optimization, stream fusion — arXiv:2403.18766 / 2410.14548) plugs in as new
-entries instead of new entry points.
+optimization, stream fusion — arXiv:2403.18766 / 2410.14548) plugs in as
+engine configurations instead of new entry points (``competitive_s`` is the
+first: set ``config.scheduler='competitive_s'`` on the streaming strategy).
 """
 from __future__ import annotations
 
@@ -98,6 +106,21 @@ def _mesh_size(mesh) -> int:
     return int(mesh.devices.size)
 
 
+def _resolve_sync_every(cfg: BigMeansConfig, rounds: int) -> int:
+    """Concrete exchange period from the sync-policy knob (``'competitive'``
+    resolves to a single final exchange)."""
+    from repro.engine import sync as sync_lib
+
+    return sync_lib.from_config(cfg).resolve(rounds)
+
+
+def _largest_divisor_le(n: int, cap: int) -> int:
+    for d in range(min(cap, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
 # ---------------------------------------------------------------------------
 # strategies
 # ---------------------------------------------------------------------------
@@ -127,9 +150,10 @@ def _fit_batched(cfg: BigMeansConfig, source: DataSource,
             f"strategy 'batched' needs batch ({cfg.batch}) to divide "
             f"n_chunks ({cfg.n_chunks})")
     rounds = cfg.n_chunks // cfg.batch
-    if rounds % cfg.sync_every:
+    sync_every = _resolve_sync_every(cfg, rounds)
+    if rounds % sync_every:
         raise ValueError(
-            f"strategy 'batched' needs sync_every ({cfg.sync_every}) to "
+            f"strategy 'batched' needs sync_every ({sync_every}) to "
             f"divide the round count ({rounds} = n_chunks / batch)")
     if cfg.mesh is not None and cfg.batch % _mesh_size(cfg.mesh):
         raise ValueError(
@@ -139,7 +163,7 @@ def _fit_batched(cfg: BigMeansConfig, source: DataSource,
     X = _require_array(source, "batched")
     state, infos = bigmeans.big_means_batched(
         X, key, k=cfg.k, s=cfg.s, batch=cfg.batch, rounds=rounds,
-        sync_every=cfg.sync_every, max_iters=cfg.max_iters, tol=cfg.tol,
+        sync_every=sync_every, max_iters=cfg.max_iters, tol=cfg.tol,
         candidates=cfg.candidates, impl=cfg.impl,
         with_replacement=cfg.with_replacement, precision=cfg.precision,
         mesh=cfg.mesh, stream_axis=cfg.stream_axis)
@@ -150,7 +174,7 @@ def _fit_batched(cfg: BigMeansConfig, source: DataSource,
 @register_strategy("sharded")
 def _fit_sharded(cfg: BigMeansConfig, source: DataSource,
                  key: jax.Array) -> FitResult:
-    from repro.core import bigmeans
+    from repro.engine import incore, middleware as mw
     from repro.launch.mesh import make_mesh
 
     mesh = cfg.mesh
@@ -163,39 +187,67 @@ def _fit_sharded(cfg: BigMeansConfig, source: DataSource,
             f"strategy 'sharded' needs the worker count ({workers}) to "
             f"divide n_chunks ({cfg.n_chunks})")
     chunks_per_worker = cfg.n_chunks // workers
-    if chunks_per_worker % cfg.sync_every:
+    sync_every = _resolve_sync_every(cfg, chunks_per_worker)
+    if chunks_per_worker % sync_every:
         raise ValueError(
-            f"strategy 'sharded' needs sync_every ({cfg.sync_every}) to "
+            f"strategy 'sharded' needs sync_every ({sync_every}) to "
             f"divide chunks_per_worker ({chunks_per_worker} = "
             f"n_chunks / workers)")
 
     X = _require_array(source, "sharded")
-    state, infos = bigmeans.big_means_sharded(
-        X, key, mesh=mesh, k=cfg.k, s=cfg.s,
-        chunks_per_worker=chunks_per_worker, sync_every=cfg.sync_every,
-        axes=tuple(mesh.axis_names), max_iters=cfg.max_iters, tol=cfg.tol,
-        candidates=cfg.candidates, impl=cfg.impl,
-        with_replacement=cfg.with_replacement, precision=cfg.precision)
-    return _result_from_state(
-        state, infos, cfg, "sharded",
-        workers=workers, chunks_per_worker=chunks_per_worker)
+    kwargs = dict(
+        mesh=mesh, k=cfg.k, s=cfg.s, chunks_per_worker=chunks_per_worker,
+        sync_every=sync_every, axes=tuple(mesh.axis_names),
+        max_iters=cfg.max_iters, tol=cfg.tol, candidates=cfg.candidates,
+        impl=cfg.impl, with_replacement=cfg.with_replacement,
+        precision=cfg.precision)
+    extras = dict(workers=workers, chunks_per_worker=chunks_per_worker)
+    if cfg.ckpt_dir is not None or cfg.time_budget_s is not None:
+        # middleware composition (checkpoint/resume, time budget): run the
+        # same sync windows host-orchestrated, one jitted segment per window
+        mws: list = []
+        if cfg.ckpt_dir:
+            mws.append(mw.Checkpoint(cfg.ckpt_dir, cfg.ckpt_every,
+                                     sync_every, step_from="step"))
+        if cfg.time_budget_s is not None:
+            mws.append(mw.TimeBudget(cfg.time_budget_s))
+        state, infos, ctx = incore.worker_sharded_rounds(
+            X, key, cfg=cfg, middlewares=mws, resume=cfg.resume, **kwargs)
+        result = _result_from_state(
+            state, infos, cfg, "sharded",
+            rounds_done=ctx.step, **extras)
+        result.checkpoint_dir = cfg.ckpt_dir
+        return result
+    state, infos = incore.worker_sharded(X, key, **kwargs)
+    return _result_from_state(state, infos, cfg, "sharded", **extras)
 
 
 @register_strategy("streaming")
 def _fit_streaming(cfg: BigMeansConfig, source: DataSource,
                    key: jax.Array) -> FitResult:
-    from repro.cluster import runner
+    from repro.engine import scheduler as sched_lib
+    from repro.engine import stream as engine_stream
     from repro.kernels import precision as px
 
+    scheduler = sched_lib.get_scheduler(cfg.scheduler, cfg)
+    fetch_s = getattr(scheduler, "fetch_s", cfg.s) or cfg.s
     # bf16 precision: chunks are cast on the host (prefetch thread) so
     # host->device transfers move half the bytes, not just HBM reads.
     # host_dtype is None otherwise: the source serves its native default.
     provider = source.provider(
-        cfg.s, seed=cfg.seed, with_replacement=cfg.with_replacement,
+        fetch_s, seed=cfg.seed, with_replacement=cfg.with_replacement,
         dtype=px.host_dtype(cfg.precision))
-    state, metrics = runner.run(
+    state, metrics = engine_stream.run_stream(
         provider, cfg, n_features=source.n_features, resume=cfg.resume,
-        key=key)
+        key=key, scheduler=scheduler)
+    extras = {"chunks_failed": metrics.chunks_failed,
+              "chunks_dropped": metrics.chunks_dropped}
+    if isinstance(scheduler, sched_lib.CompetitiveS):
+        extras["competitive_s"] = {
+            "ladder": scheduler.ladder,
+            "final_sizes": list(scheduler.s_of),
+            "windows": len(scheduler.history),
+        }
     return FitResult(
         centroids=state.centroids,
         objective=float(state.f_best),
@@ -203,37 +255,43 @@ def _fit_streaming(cfg: BigMeansConfig, source: DataSource,
         strategy="streaming",
         n_chunks=metrics.chunks_done,
         n_accepted=metrics.accepted,
-        n_iterations=0,          # the runner does not surface Lloyd iters
+        n_iterations=metrics.lloyd_iters,
         n_dist_evals=float(state.n_dist_evals),
         wall_time_s=metrics.wall_time_s,
         trace=list(metrics.trace),
         checkpoint_dir=cfg.ckpt_dir,
         config=cfg,
-        extras={"chunks_failed": metrics.chunks_failed},
+        extras=extras,
     )
 
 
 def resolve_auto(cfg: BigMeansConfig, source: DataSource) -> str:
     """Pick a concrete strategy from config + data source + topology.
 
-    Out-of-core / stream-shaped sources and runner-only features (ckpt,
-    time budget, VNS) go to ``streaming``; ``batch > 1`` goes to
-    ``batched``; a mesh or a multi-device host goes to ``sharded``;
-    otherwise the paper's ``sequential``.
+    Out-of-core / stream-shaped sources and stream-loop-only features
+    (VNS, ``competitive_s``) go to ``streaming``; ``batch > 1`` goes to
+    ``batched``; a mesh or a multi-device host goes to ``sharded``
+    (deriving a compatible ``sync_every`` when the requested one does not
+    divide the per-worker chunk count — see :func:`_fit_auto`); otherwise
+    the paper's ``sequential``.
     """
     wants_runner = (cfg.ckpt_dir is not None or cfg.time_budget_s is not None
-                    or bool(cfg.vns_ladder))
+                    or bool(cfg.vns_ladder)
+                    or cfg.scheduler == "competitive_s")
     if not source.in_core or source.prefers_streaming or wants_runner:
+        if cfg.ckpt_dir is not None and source.in_core \
+                and not source.prefers_streaming and cfg.batch == 1 \
+                and not cfg.vns_ladder and cfg.scheduler == "uniform" \
+                and cfg.mesh is not None \
+                and cfg.n_chunks % _mesh_size(cfg.mesh) == 0:
+            return "sharded"        # in-core mesh + checkpoints: now possible
         return "streaming"
     if cfg.batch > 1:
         return "batched"
     if cfg.mesh is not None or len(jax.devices()) > 1:
-        # only if the topology meets the sharded driver's preconditions —
-        # auto must never pick a strategy that rejects this config
         workers = (_mesh_size(cfg.mesh) if cfg.mesh is not None
                    else len(jax.devices()))
-        if (cfg.n_chunks % workers == 0
-                and (cfg.n_chunks // workers) % cfg.sync_every == 0):
+        if cfg.n_chunks % workers == 0:
             return "sharded"
     return "sequential"
 
@@ -241,6 +299,19 @@ def resolve_auto(cfg: BigMeansConfig, source: DataSource) -> str:
 def _fit_auto(cfg: BigMeansConfig, source: DataSource,
               key: jax.Array) -> FitResult:
     name = resolve_auto(cfg, source)
+    extras = {}
+    if name == "sharded":
+        workers = (_mesh_size(cfg.mesh) if cfg.mesh is not None
+                   else len(jax.devices()))
+        chunks_per_worker = cfg.n_chunks // workers
+        if chunks_per_worker % cfg.sync_every:
+            # auto never downgrades a multi-device host to sequential over
+            # an incompatible sync_every: derive the largest compatible one
+            used = _largest_divisor_le(chunks_per_worker, cfg.sync_every)
+            extras["sync_every_adjusted"] = {
+                "requested": cfg.sync_every, "used": used}
+            cfg = cfg.replace(sync_every=used)
     result = _STRATEGIES[name](cfg, source, key)
     result.extras["auto"] = True
+    result.extras.update(extras)
     return result

@@ -43,6 +43,20 @@ def save(directory: str, step: int, tree, *, keep: int = 3) -> str:
     return final
 
 
+def n_leaves(directory: str, step: int | None = None) -> int | None:
+    """Leaf count of a stored checkpoint (from its metadata, without loading
+    the arrays) — lets callers distinguish payload formats (e.g. the engine's
+    ``((state, key), vns_aux)`` vs the legacy ``(state, key)``) before
+    choosing an example tree for :func:`restore`."""
+    if step is None:
+        step = latest_step(directory)
+    if step is None:
+        return None
+    path = os.path.join(directory, f"step_{step:012d}", "meta.json")
+    with open(path) as f:
+        return int(json.load(f)["n_leaves"])
+
+
 def latest_step(directory: str) -> int | None:
     if not os.path.isdir(directory):
         return None

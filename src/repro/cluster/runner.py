@@ -1,53 +1,29 @@
-"""Host-streaming Big-means driver: out-of-core data, checkpoints, failures.
+"""Host-streaming Big-means driver — a thin assembly of engine pieces.
 
-This is the production entry point for datasets that do not fit device (or
-host) memory.  Chunks are *fetched* by a user-supplied provider — a memmap
-slice, a shard of a distributed file system, or the synthetic generator — and
-fed to the jitted ``chunk_step``.  Design properties (DESIGN.md §6):
-
-* **fault tolerance** — global state is (C, degenerate, f_best, step, key):
-  kilobytes.  Checkpoint every ``ckpt_every`` chunks; on restart, resume from
-  the latest checkpoint.  A lost/failed chunk is simply skipped: chunks are
-  i.i.d. uniform samples, so dropping one changes nothing statistically (the
-  algorithm is natively fault-tolerant).
-* **straggler mitigation** — the Lloyd iteration budget is a compile-time
-  bound, and a wall-clock budget (the paper's cpu_max stop condition) caps
-  the whole run; a straggling provider fetch can be skipped after
-  ``fetch_timeout`` without violating correctness (same argument as above).
-* **elasticity** — the state carries no topology; rescaling workers between
-  restarts only changes how many chunk streams advance per wall-clock second.
-* **pipelining** — a background thread prefetches up to ``prefetch`` chunks
-  into a bounded queue and stages them on device (``jax.device_put``), so
-  provider fetch and host→device transfer overlap device compute instead of
-  blocking it.  Under ``cfg.precision='bf16'`` the prefetch thread casts
-  chunks to bf16 *on the host* before ``device_put``, halving the
-  host→device bytes as well as the device-side HBM traffic.  ``batch`` > 1 feeds B chunks at a time to the batched
-  driver (``chunk_step_batched``): B Lloyd searches advance concurrently
-  against the incumbent and the best result is kept — the single-device
-  analogue of the sharded driver's worker streams.
+The out-of-core accept loop (prefetch pipeline, fault tolerance, VNS,
+checkpoints, time budget) lives in :mod:`repro.engine.stream`; this module
+keeps the historical entry point: :func:`run` builds the config-derived
+middleware stack / topology / scheduler / sync policy and delegates.  The
+names ``RunnerMetrics``, ``EndOfStream`` and the prefetcher classes are
+re-exported for backwards compatibility.
 """
 from __future__ import annotations
 
-import dataclasses
-import queue
-import threading
-import time
 import warnings
-from typing import Callable, Iterator
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.cluster import checkpoint
 from repro.core import bigmeans
-
-ChunkProvider = Callable[[int], np.ndarray]
-
-
-class EndOfStream(Exception):
-    """Raised by a provider to end the run cleanly before ``n_chunks``
-    (e.g. a finite chunk iterator ran dry).  Not counted as a failure."""
+from repro.engine.stream import (  # noqa: F401  (compat re-exports)
+    ChunkProvider,
+    EndOfStream,
+    RunnerMetrics,
+    _FetchFailure,
+    _Prefetcher,
+    _sync_chunks,
+    run_stream,
+)
 
 
 def RunnerConfig(**kwargs):
@@ -67,113 +43,6 @@ def RunnerConfig(**kwargs):
     return BigMeansConfig(**kwargs)
 
 
-@dataclasses.dataclass
-class RunnerMetrics:
-    """``trace`` holds ``(chunk_id, f_best, f_new)`` progress entries and
-    ``("fetch_error", chunk_id, "ExcType: message")`` entries for failed
-    fetches, so streaming failures are debuggable from the result."""
-    chunks_done: int = 0
-    chunks_failed: int = 0
-    accepted: int = 0
-    wall_time_s: float = 0.0
-    f_best: float = float("inf")
-    trace: list = dataclasses.field(default_factory=list)
-
-
-class _FetchFailure:
-    """A failed chunk fetch: carries the provider's exception type+message."""
-
-    __slots__ = ("error",)
-
-    def __init__(self, exc: BaseException):
-        self.error = f"{type(exc).__name__}: {exc}"
-
-
-class _Prefetcher:
-    """Background chunk fetcher: provider call + np conversion + device_put
-    run off the main thread, double-buffered through a bounded queue.
-
-    Yields ``(chunk_id, chunk-or-_FetchFailure)`` in id order; a
-    ``_FetchFailure`` marks a failed fetch (the provider raised) so the
-    consumer can account for it and record the cause.
-    """
-
-    _DONE = object()
-
-    def __init__(self, provider, ids, depth,
-                 fault_injector=None, dtype=np.float32):
-        self._provider = provider
-        self._ids = ids
-        self._dtype = dtype
-        self._fault_injector = fault_injector
-        self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
-        self._stop = threading.Event()
-        self._thread = threading.Thread(target=self._work, daemon=True)
-        self._thread.start()
-
-    def _fetch(self, cid):
-        try:
-            if self._fault_injector is not None:
-                self._fault_injector(cid)
-            arr = np.asarray(self._provider(cid), dtype=self._dtype)
-            return jax.device_put(arr)
-        except EndOfStream:
-            return self._DONE
-        except Exception as exc:
-            return _FetchFailure(exc)
-
-    def _put(self, item) -> bool:
-        while not self._stop.is_set():
-            try:
-                self._q.put(item, timeout=0.05)
-                return True
-            except queue.Full:
-                continue
-        return False
-
-    def _work(self):
-        for cid in self._ids:
-            if self._stop.is_set():
-                return
-            item = self._fetch(cid)
-            if item is self._DONE:          # provider signalled end-of-stream
-                break
-            if not self._put((cid, item)):
-                return
-        self._put(self._DONE)
-
-    def __iter__(self) -> Iterator:
-        while True:
-            item = self._q.get()
-            if item is self._DONE:
-                return
-            yield item
-
-    def close(self):
-        self._stop.set()
-        # Drain so a blocked producer can observe the stop flag and exit.
-        try:
-            while True:
-                self._q.get_nowait()
-        except queue.Empty:
-            pass
-        self._thread.join(timeout=5.0)
-
-
-def _sync_chunks(provider, ids, fault_injector, dtype=np.float32):
-    """prefetch=0 fallback: fetch in the main thread (debug / determinism)."""
-    for cid in ids:
-        try:
-            if fault_injector is not None:
-                fault_injector(cid)
-            arr = np.asarray(provider(cid), dtype=dtype)
-            yield cid, jax.device_put(arr)
-        except EndOfStream:
-            return
-        except Exception as exc:
-            yield cid, _FetchFailure(exc)
-
-
 def run(
     provider: ChunkProvider,
     cfg,
@@ -186,133 +55,12 @@ def run(
     """Stream chunks through Big-means until the chunk count or time budget.
 
     ``cfg`` is a `repro.api.BigMeansConfig` (or anything with the same
-    fields; the deprecated :func:`RunnerConfig` shim builds one).
+    fields; the deprecated :func:`RunnerConfig` shim builds one).  The
+    scheduler (``cfg.scheduler``), topology (``cfg.mesh`` shards the stream
+    axis) and sync policy (``cfg.sync`` / ``cfg.sync_every``) all come from
+    the config; middleware (checkpoint, VNS, budget, tracing, fetch skip)
+    is the default stack.
     """
-    state = bigmeans.init_state(cfg.k, n_features)
-    start_chunk = 0
-    if key is None:
-        key = jax.random.PRNGKey(cfg.seed)
-
-    if resume and cfg.ckpt_dir and checkpoint.latest_step(cfg.ckpt_dir) is not None:
-        (state, key), start_chunk = checkpoint.restore(
-            cfg.ckpt_dir, (state, key)
-        )
-
-    metrics = RunnerMetrics(f_best=float(state.f_best))
-    t0 = time.monotonic()
-
-    ladder = (cfg.s,) + tuple(cfg.vns_ladder)
-    rung, stall = 0, 0
-    last_s = cfg.s
-
-    from repro.kernels import precision as px
-
-    precision = getattr(cfg, "precision", "auto")
-    host_dtype = px.host_dtype(precision) or np.float32
-    ids = range(start_chunk, cfg.n_chunks)
-    source = (
-        _Prefetcher(provider, ids, cfg.prefetch, fault_injector, host_dtype)
-        if cfg.prefetch > 0
-        else _sync_chunks(provider, ids, fault_injector, host_dtype)
-    )
-
-    def step_batch(state, pending):
-        """Advance the incumbent by len(pending) concurrent chunk streams."""
-        cids = [cid for cid, _ in pending]
-        # Per-chunk keys are folded from (seed, chunk_id): restarts, batch
-        # sizes and worker-count changes replay the identical sample stream.
-        cks = [jax.random.fold_in(key, cid) for cid in cids]
-        if len(pending) == 1:
-            return bigmeans.chunk_step(
-                pending[0][1], state, cks[0],
-                max_iters=cfg.max_iters, tol=cfg.tol,
-                candidates=cfg.candidates, impl=cfg.impl,
-                precision=precision,
-            )
-        chunks = jnp.stack([c for _, c in pending])
-        states = bigmeans.broadcast_state(state, len(pending))
-        states, info = bigmeans.chunk_step_batched(
-            chunks, states, jnp.stack(cks),
-            max_iters=cfg.max_iters, tol=cfg.tol,
-            candidates=cfg.candidates, impl=cfg.impl,
-            precision=precision,
-        )
-        return bigmeans.reduce_state(states, base=state), info
-
-    def consume_info(info):
-        nonlocal rung, stall
-        n_acc = int(np.sum(np.asarray(info.accepted)))
-        metrics.accepted += n_acc
-        if n_acc:
-            rung, stall = 0, 0          # VNS: success -> base neighbourhood
-        elif cfg.vns_ladder:
-            stall += int(np.size(np.asarray(info.accepted)))
-            if stall >= cfg.vns_patience:
-                rung = min(rung + 1, len(ladder) - 1)
-                stall = 0
-
-    pending: list = []
-    last_cid = start_chunk - 1
-    try:
-        for chunk_id, chunk in source:
-            if cfg.time_budget_s is not None:
-                if time.monotonic() - t0 > cfg.time_budget_s:
-                    break
-            if chunk is None or isinstance(chunk, _FetchFailure):
-                metrics.chunks_failed += 1
-                if isinstance(chunk, _FetchFailure):
-                    metrics.trace.append(("fetch_error", chunk_id, chunk.error))
-                continue
-            s_now = ladder[rung]
-            if chunk.shape[0] > s_now:
-                chunk = chunk[:s_now]       # VNS: shrink the neighbourhood
-            if pending and chunk.shape != pending[0][1].shape:
-                # ragged chunk (short tail / VNS rung change mid-batch):
-                # flush the homogeneous batch first, then start a new one
-                state, info = step_batch(state, pending)
-                metrics.chunks_done += len(pending)
-                last_cid = pending[-1][0]
-                pending = []
-                consume_info(info)
-            if chunk.shape[0] != last_s and np.isfinite(float(state.f_best)):
-                # objectives are sums over s points: rescale the incumbent's
-                # objective so acceptance compares per-point quality
-                state = state._replace(
-                    f_best=state.f_best * (chunk.shape[0] / last_s))
-            last_s = chunk.shape[0]
-            pending.append((chunk_id, chunk))
-            if len(pending) < cfg.batch:
-                continue
-
-            state, info = step_batch(state, pending)
-            metrics.chunks_done += len(pending)
-            last_cid = pending[-1][0]
-            pending = []
-            consume_info(info)
-            if cfg.log_every and metrics.chunks_done % cfg.log_every < cfg.batch:
-                metrics.trace.append(
-                    (last_cid, float(state.f_best),
-                     float(np.min(np.asarray(info.f_new))))
-                )
-            if cfg.ckpt_dir and (last_cid + 1) % cfg.ckpt_every < cfg.batch:
-                checkpoint.save(cfg.ckpt_dir, last_cid + 1, (state, key))
-            if cfg.time_budget_s is not None:
-                if time.monotonic() - t0 > cfg.time_budget_s:
-                    break
-        else:
-            if pending:                     # final partial batch
-                state, info = step_batch(state, pending)
-                metrics.chunks_done += len(pending)
-                last_cid = pending[-1][0]
-                pending = []
-                consume_info(info)
-    finally:
-        if isinstance(source, _Prefetcher):
-            source.close()
-
-    if cfg.ckpt_dir:
-        checkpoint.save(cfg.ckpt_dir, metrics.chunks_done + start_chunk,
-                        (state, key))
-    metrics.wall_time_s = time.monotonic() - t0
-    metrics.f_best = float(state.f_best)
-    return state, metrics
+    return run_stream(
+        provider, cfg, n_features=n_features, resume=resume,
+        fault_injector=fault_injector, key=key)

@@ -1,24 +1,29 @@
-"""Big-means (Algorithm 3): decomposition-driven global search for MSSC.
+"""Big-means (Algorithm 3): the jitted chunk-step core and its state algebra.
 
-Four drivers share the jitted chunk-step core:
+This module owns the *numerics* every execution composition reuses
+unchanged: :func:`chunk_step` / :func:`chunk_step_batched` (re-seed
+degenerate slots, Lloyd, keep-the-best, n_d accounting), the
+``BigMeansState`` algebra (:func:`broadcast_state` / :func:`reduce_state` /
+the incumbent-exchange helpers) and the uniform :func:`sample_chunk`
+decomposition sampler.
 
-* :func:`big_means` — the paper's sequential algorithm as a ``lax.scan`` over
-  uniformly sampled chunks (in-core dataset).
-* :func:`big_means_batched` — B incumbent streams advance through Lloyd
-  concurrently on one device via :func:`chunk_step_batched` (optionally
-  sharding the stream axis over a ``streams`` mesh); the streams exchange
-  incumbents by argmin-reduce every ``sync_every`` rounds.  ``batch=1``
-  follows the same key schedule and chunk stream as :func:`big_means`
-  (fp-identical on the reference path; the Pallas path runs the batched
-  kernel variant, so agreement there is to kernel fp tolerance).
-* :func:`big_means_sharded` — the multi-worker generalization: every worker
-  (one group of the ``workers`` mesh axis) runs an independent chunk stream
-  against its own incumbent and the incumbents are exchanged by a tiny
-  argmin-all-reduce every ``sync_every`` chunks.  ``sync_every=1`` is the
-  "collective" mode, ``sync_every=n_chunks`` the "competitive" mode; world
-  size 1 recovers the paper exactly.
-* ``repro.cluster.runner`` — host-streaming driver (out-of-core data,
-  prefetch pipeline, checkpoints, stragglers) built on the same chunk steps.
+The chunk *loops* live in :mod:`repro.engine` — one scheduler / topology /
+sync-policy core instead of four hand-rolled drivers.  The historical
+entry points remain as thin assemblies of engine pieces, with bit-identical
+trajectories:
+
+* :func:`big_means` — the paper's sequential algorithm
+  (:func:`repro.engine.incore.sequential`).
+* :func:`big_means_batched` — B incumbent streams on one device, optionally
+  stream-mesh sharded (``engine.incore.batched_local`` /
+  ``batched_stream_mesh``).  ``batch=1`` follows the same key schedule and
+  chunk stream as :func:`big_means` (fp-identical on the reference path).
+* :func:`big_means_sharded` — multi-worker chunk streams with a periodic
+  argmin-all-reduce exchange (``engine.incore.worker_sharded``).
+  ``sync_every=1`` is the "collective" mode, ``sync_every=n_chunks`` the
+  "competitive" mode; world size 1 recovers the paper exactly.
+* ``repro.cluster.runner`` — the out-of-core host loop
+  (``engine.stream.run_stream`` + the default middleware stack).
 """
 from __future__ import annotations
 
@@ -27,17 +32,8 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.core import kmeans, kmeanspp
-from repro.kernels import precision as px
-
-if hasattr(jax, "shard_map"):
-    _shard_map = functools.partial(jax.shard_map, check_vma=False)
-else:   # jax < 0.6: experimental API, `check_rep` instead of `check_vma`
-    from jax.experimental.shard_map import shard_map as _experimental_shard_map
-
-    _shard_map = functools.partial(_experimental_shard_map, check_rep=False)
 
 
 class BigMeansState(NamedTuple):
@@ -140,13 +136,6 @@ def sample_chunk(
     return jnp.take(X, idx, axis=0)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "k", "s", "n_chunks", "max_iters", "tol", "candidates", "impl",
-        "with_replacement", "precision",
-    ),
-)
 def big_means(
     X: jax.Array,
     key: jax.Array,
@@ -161,24 +150,17 @@ def big_means(
     with_replacement: bool = True,
     precision: str = "auto",
 ) -> tuple[BigMeansState, ChunkInfo]:
-    """Sequential Big-means over an in-core dataset.  Returns (state, traces)."""
-    X = px.cast_storage(X, precision)
-    state = init_state(k, X.shape[1])
+    """Sequential Big-means over an in-core dataset.  Returns (state, traces).
 
-    def body(carry, key_i):
-        state = carry
-        ks, kc = jax.random.split(key_i)
-        chunk = sample_chunk(X, ks, s, with_replacement=with_replacement)
-        state, info = chunk_step(
-            chunk, state, kc,
-            max_iters=max_iters, tol=tol, candidates=candidates, impl=impl,
-            precision=precision,
-        )
-        return state, info
+    Assembly shim: single-device topology, uniform schedule, scalar stream
+    (:func:`repro.engine.incore.sequential`).
+    """
+    from repro.engine import incore
 
-    keys = jax.random.split(key, n_chunks)
-    state, infos = jax.lax.scan(body, state, keys)
-    return state, infos
+    return incore.sequential(
+        X, key, k=k, s=s, n_chunks=n_chunks, max_iters=max_iters, tol=tol,
+        candidates=candidates, impl=impl, with_replacement=with_replacement,
+        precision=precision)
 
 
 # ---------------------------------------------------------------------------
@@ -340,145 +322,26 @@ def big_means_batched(
     properties 6-7 promise, so extra devices scale throughput without
     changing the per-stream trajectories (same key schedule as the
     single-device batched driver).
+
+    Assembly shim: uniform schedule + periodic sync on the single-device or
+    stream-mesh topology (``repro.engine.incore.batched_local`` /
+    ``batched_stream_mesh``).
     """
+    from repro.engine import incore
+
     assert rounds % sync_every == 0, "sync_every must divide rounds"
     if mesh is not None:
-        return _big_means_batched_sharded(
+        return incore.batched_stream_mesh(
             X, key, mesh=mesh, stream_axis=stream_axis, k=k, s=s,
             batch=batch, rounds=rounds, sync_every=sync_every,
             max_iters=max_iters, tol=tol, candidates=candidates, impl=impl,
             with_replacement=with_replacement, precision=precision,
         )
-    return _big_means_batched_local(
+    return incore.batched_local(
         X, key, k=k, s=s, batch=batch, rounds=rounds, sync_every=sync_every,
         max_iters=max_iters, tol=tol, candidates=candidates, impl=impl,
         with_replacement=with_replacement, precision=precision,
     )
-
-
-def _stream_keys(key, rounds: int, sync_every: int, batch: int):
-    """[outer, sync_every, batch, ...] key schedule: chunk (r, b) gets
-    split(key, rounds*batch)[r*batch + b] — for batch=1 this is
-    byte-identical to the sequential schedule."""
-    keys = jax.random.split(key, rounds * batch)
-    return keys.reshape(
-        (rounds // sync_every, sync_every, batch) + keys.shape[1:])
-
-
-def _stream_scan(X, states, keys, *, s, max_iters, tol, candidates, impl,
-                 with_replacement, sync_fn, precision="auto"):
-    """Scan ``rounds`` chunk rounds over per-stream states; ``sync_fn``
-    exchanges incumbents at each sync boundary."""
-
-    def body(states, keys_i):                       # keys_i [batch, ...]
-        split = jax.vmap(jax.random.split)(keys_i)  # [batch, 2, ...]
-        ks, kc = split[:, 0], split[:, 1]
-        chunks = jax.vmap(
-            lambda kk: sample_chunk(X, kk, s, with_replacement=with_replacement)
-        )(ks)
-        return chunk_step_batched(
-            chunks, states, kc,
-            max_iters=max_iters, tol=tol, candidates=candidates, impl=impl,
-            precision=precision,
-        )
-
-    def round_body(states, keys_r):                 # keys_r [sync, batch, ...]
-        states, infos = jax.lax.scan(body, states, keys_r)
-        return sync_fn(states), infos
-
-    states, infos = jax.lax.scan(round_body, states, keys)
-    # [outer, sync, batch, ...] -> [rounds * batch, ...], round-major order
-    infos = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[3:]), infos)
-    return states, infos
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "k", "s", "batch", "rounds", "sync_every", "max_iters", "tol",
-        "candidates", "impl", "with_replacement", "precision",
-    ),
-)
-def _big_means_batched_local(
-    X, key, *, k, s, batch, rounds, sync_every, max_iters, tol, candidates,
-    impl, with_replacement, precision="auto",
-):
-    X = px.cast_storage(X, precision)
-    states = broadcast_state(init_state(k, X.shape[1]), batch)
-    keys = _stream_keys(key, rounds, sync_every, batch)
-    states, infos = _stream_scan(
-        X, states, keys, s=s, max_iters=max_iters, tol=tol,
-        candidates=candidates, impl=impl, with_replacement=with_replacement,
-        sync_fn=_sync_streams, precision=precision,
-    )
-    return reduce_state(states), infos
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "mesh", "stream_axis", "k", "s", "batch", "rounds", "sync_every",
-        "max_iters", "tol", "candidates", "impl", "with_replacement",
-        "precision",
-    ),
-)
-def _big_means_batched_sharded(
-    X, key, *, mesh, stream_axis, k, s, batch, rounds, sync_every,
-    max_iters, tol, candidates, impl, with_replacement, precision="auto",
-):
-    ndev = mesh.shape[stream_axis]
-    assert batch % ndev == 0, "stream mesh axis must divide batch"
-    X = px.cast_storage(X, precision)
-    n = X.shape[1]
-    keys = _stream_keys(key, rounds, sync_every, batch)
-
-    def sync(states):
-        """Global keep-the-best: local winner, then argmin-all-gather
-        across devices; every stream continues from the global winner."""
-        w = jnp.argmin(states.f_best)
-        f_all = jax.lax.all_gather(states.f_best[w], stream_axis)      # [D]
-        c_all = jax.lax.all_gather(states.centroids[w], stream_axis)
-        d_all = jax.lax.all_gather(states.degenerate[w], stream_axis)
-        g = jnp.argmin(f_all)
-        bl = states.f_best.shape[0]
-        return states._replace(
-            centroids=jnp.broadcast_to(c_all[g], states.centroids.shape),
-            degenerate=jnp.broadcast_to(d_all[g], states.degenerate.shape),
-            f_best=jnp.broadcast_to(f_all[g], (bl,)),
-        )
-
-    def worker(x_rep, keys_local):          # [outer, sync, batch/D, ...]
-        states = broadcast_state(init_state(k, n), keys_local.shape[2])
-        states, infos = _stream_scan(
-            x_rep, states, keys_local, s=s, max_iters=max_iters, tol=tol,
-            candidates=candidates, impl=impl,
-            with_replacement=with_replacement, sync_fn=sync,
-            precision=precision,
-        )
-        local = reduce_state(states)
-        f_all = jax.lax.all_gather(local.f_best, stream_axis)
-        c_all = jax.lax.all_gather(local.centroids, stream_axis)
-        d_all = jax.lax.all_gather(local.degenerate, stream_axis)
-        g = jnp.argmin(f_all)
-        final = BigMeansState(
-            centroids=c_all[g],
-            degenerate=d_all[g],
-            f_best=f_all[g],
-            n_accepted=jax.lax.psum(local.n_accepted, stream_axis),
-            n_dist_evals=jax.lax.psum(local.n_dist_evals, stream_axis),
-        )
-        return final, infos
-
-    shard = _shard_map(
-        worker,
-        mesh=mesh,
-        in_specs=(P(), P(None, None, stream_axis, None)),
-        out_specs=(
-            BigMeansState(P(), P(), P(), P(), P()),
-            ChunkInfo(*([P(stream_axis)] * 4)),
-        ),
-    )
-    return shard(X, keys)
 
 
 def _exchange_best(state: BigMeansState, axis: str) -> BigMeansState:
@@ -517,55 +380,14 @@ def big_means_sharded(
     Each worker samples chunks from its local shard (uniform placement makes
     local sampling equivalent to global sampling).  PRNG keys are folded with
     the worker index, so results are reproducible for a fixed topology.
+
+    Assembly shim: worker-partitioned schedule + periodic sync on the
+    worker-mesh topology (:func:`repro.engine.incore.worker_sharded`).
     """
-    assert chunks_per_worker % sync_every == 0, "sync_every must divide chunks"
-    n_rounds = chunks_per_worker // sync_every
-    axis = axes if len(axes) > 1 else axes[0]
+    from repro.engine import incore
 
-    def worker(x_local, key):
-        widx = jax.lax.axis_index(axes[0])
-        if len(axes) > 1:
-            for a in axes[1:]:
-                # mesh.shape is static — avoids jax.lax.axis_size, which
-                # older jax versions lack inside shard_map.
-                widx = widx * mesh.shape[a] + jax.lax.axis_index(a)
-        key = jax.random.fold_in(key, widx)
-        state = init_state(k, x_local.shape[1])
-
-        def round_body(state, key_r):
-            def body(state, key_i):
-                ks, kc = jax.random.split(key_i)
-                chunk = sample_chunk(
-                    x_local, ks, s, with_replacement=with_replacement
-                )
-                return chunk_step(
-                    chunk, state, kc,
-                    max_iters=max_iters, tol=tol,
-                    candidates=candidates, impl=impl, precision=precision,
-                )
-
-            keys = jax.random.split(key_r, sync_every)
-            state, infos = jax.lax.scan(body, state, keys)
-            state = _exchange_best(state, axis)
-            return state, infos
-
-        keys = jax.random.split(key, n_rounds)
-        state, infos = jax.lax.scan(round_body, state, keys)
-        infos = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), infos)
-        # distance-eval counter: aggregate across workers (paper's n_d).
-        total_nd = jax.lax.psum(state.n_dist_evals, axis)
-        total_acc = jax.lax.psum(state.n_accepted, axis)
-        state = state._replace(n_dist_evals=total_nd, n_accepted=total_acc)
-        return state, infos
-
-    shard = _shard_map(
-        worker,
-        mesh=mesh,
-        in_specs=(P(axes), P()),
-        out_specs=(
-            BigMeansState(P(), P(), P(), P(), P()),
-            ChunkInfo(*([P(axes[0])] * 4)),
-        ),
-    )
-    xd = px.cast_storage(X, precision)
-    return shard(xd, key)
+    return incore.worker_sharded(
+        X, key, mesh=mesh, k=k, s=s, chunks_per_worker=chunks_per_worker,
+        sync_every=sync_every, axes=axes, max_iters=max_iters, tol=tol,
+        candidates=candidates, impl=impl, with_replacement=with_replacement,
+        precision=precision)

@@ -1,0 +1,92 @@
+"""`repro.engine` — one execution engine for every Big-means composition.
+
+The paper's whole algorithm is *decomposition*: many small chunk-solves
+exchanging incumbents.  The engine expresses that loop once, decomposed into
+orthogonal pieces, so "which chunks", "where they run", "how streams sync"
+and "what wraps the accept loop" compose freely instead of each living in
+exactly one hand-rolled driver:
+
+* :mod:`repro.engine.scheduler` — **ChunkScheduler**: uniform,
+  worker-partitioned, and ``competitive_s`` (per-stream sample-size racing,
+  arXiv:2403.18766).
+* :mod:`repro.engine.topology` — **Topology**: single device, stream mesh
+  (batch axis sharded via ``shard_map``), worker mesh.
+* :mod:`repro.engine.sync` — **SyncPolicy**: collective (``sync_every=1``),
+  periodic, competitive (``∞``) — the paper's parallel modes as data.
+* :mod:`repro.engine.middleware` — the accept-loop **middleware stack**:
+  checkpoint/resume, VNS ladder, time budget, trace/metrics, fetch-failure
+  skip — wrapping *any* composition.
+* :mod:`repro.engine.incore` — the jitted in-core chunk-loop cores (the
+  historical drivers' scan bodies, bit-identical) + host-orchestrated
+  sharded windows.
+* :mod:`repro.engine.stream` — the out-of-core host loop (prefetch
+  pipeline), single-device or stream-mesh.
+
+The legacy entry points (``repro.core.bigmeans.big_means*``,
+``repro.cluster.runner.run``) and every ``repro.api`` strategy are thin
+assemblies of these pieces.
+"""
+from repro.engine import incore as incore
+from repro.engine import middleware as middleware
+from repro.engine import scheduler as scheduler
+from repro.engine import stream as stream
+from repro.engine import sync as sync
+from repro.engine import topology as topology
+from repro.engine.middleware import (
+    Checkpoint,
+    EngineContext,
+    FetchSkip,
+    Middleware,
+    MiddlewareStack,
+    TimeBudget,
+    TraceLog,
+    VNSLadder,
+    default_stack,
+    load_loop_state,
+)
+from repro.engine.scheduler import (
+    CompetitiveS,
+    Uniform,
+    WorkerPartitioned,
+    get_scheduler,
+    list_schedulers,
+    register_scheduler,
+)
+from repro.engine.stream import EndOfStream, RunnerMetrics, run_stream
+from repro.engine.sync import SyncPolicy, collective, competitive, periodic
+from repro.engine.topology import SingleDevice, StreamMesh, WorkerMesh
+
+__all__ = [
+    "Checkpoint",
+    "CompetitiveS",
+    "EndOfStream",
+    "EngineContext",
+    "FetchSkip",
+    "Middleware",
+    "MiddlewareStack",
+    "RunnerMetrics",
+    "SingleDevice",
+    "StreamMesh",
+    "SyncPolicy",
+    "TimeBudget",
+    "TraceLog",
+    "Uniform",
+    "VNSLadder",
+    "WorkerMesh",
+    "WorkerPartitioned",
+    "collective",
+    "competitive",
+    "default_stack",
+    "get_scheduler",
+    "incore",
+    "list_schedulers",
+    "load_loop_state",
+    "middleware",
+    "periodic",
+    "register_scheduler",
+    "run_stream",
+    "scheduler",
+    "stream",
+    "sync",
+    "topology",
+]

@@ -1,0 +1,277 @@
+"""Accept-loop middleware: capabilities that wrap *any* engine composition.
+
+Checkpointing, the VNS chunk-size ladder, wall-clock budgets, progress
+tracing and fetch-failure skipping were historically welded into the
+streaming runner's loop body — which is why "sharded with checkpoints" or
+"time-budgeted batched" could not be expressed.  Here each capability is a
+:class:`Middleware` with narrow hooks, and a :class:`MiddlewareStack`
+composes them around whichever loop the engine runs (the out-of-core stream
+loop or the host-orchestrated sharded rounds).
+
+Hook order per window: ``transform_chunk`` (as chunks arrive) →
+``after_window`` (incumbent advanced) → ``should_stop``.  The stack calls
+hooks in list order, so put policy middleware (VNS) before observers
+(trace, checkpoint) — :func:`default_stack` does.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.cluster import checkpoint as ckpt_lib
+
+
+@dataclasses.dataclass
+class EngineContext:
+    """Mutable per-run state threaded through every hook.
+
+    ``state`` is the incumbent (scalar ``BigMeansState``, or the stacked
+    per-worker/per-stream states in mesh compositions); ``info`` the latest
+    window's ``ChunkInfo``; ``rung``/``stall``/``last_s`` the VNS loop state
+    (checkpointed alongside the incumbent so a resume continues the ladder
+    instead of silently resetting it).
+    """
+
+    cfg: Any
+    key: Any
+    metrics: Any
+    state: Any = None
+    info: Any = None
+    step: int = 0                   # chunks (stream loop) / rounds (sharded)
+    start_step: int = 0
+    last_cid: int = -1
+    batch_len: int = 0
+    t0: float = 0.0
+    rung: int = 0
+    stall: int = 0
+    last_s: int = 0
+    stop_reason: str | None = None
+    extras: dict = dataclasses.field(default_factory=dict)
+
+
+class Middleware:
+    """Base class: every hook is a no-op."""
+
+    def on_start(self, ctx: EngineContext) -> None:
+        pass
+
+    def transform_chunk(self, ctx: EngineContext, cid: int, chunk):
+        return chunk
+
+    def on_fetch_error(self, ctx: EngineContext, cid: int, err: str) -> None:
+        pass
+
+    def after_window(self, ctx: EngineContext) -> None:
+        pass
+
+    def should_stop(self, ctx: EngineContext) -> bool:
+        return False
+
+    def on_finish(self, ctx: EngineContext) -> None:
+        pass
+
+
+class MiddlewareStack:
+    def __init__(self, middlewares):
+        self.middlewares = list(middlewares)
+
+    def __iter__(self):
+        return iter(self.middlewares)
+
+    def find(self, cls):
+        for m in self.middlewares:
+            if isinstance(m, cls):
+                return m
+        return None
+
+    def on_start(self, ctx):
+        for m in self.middlewares:
+            m.on_start(ctx)
+
+    def transform_chunk(self, ctx, cid, chunk):
+        for m in self.middlewares:
+            chunk = m.transform_chunk(ctx, cid, chunk)
+        return chunk
+
+    def on_fetch_error(self, ctx, cid, err):
+        for m in self.middlewares:
+            m.on_fetch_error(ctx, cid, err)
+
+    def after_window(self, ctx):
+        for m in self.middlewares:
+            m.after_window(ctx)
+
+    def should_stop(self, ctx) -> bool:
+        for m in self.middlewares:
+            if m.should_stop(ctx):
+                if ctx.stop_reason is None:
+                    ctx.stop_reason = type(m).__name__
+                return True
+        return False
+
+    def on_finish(self, ctx):
+        for m in self.middlewares:
+            m.on_finish(ctx)
+
+
+class TimeBudget(Middleware):
+    """The paper's ``cpu_max`` stop condition, composable with any loop."""
+
+    def __init__(self, budget_s: float):
+        self.budget_s = budget_s
+
+    def should_stop(self, ctx) -> bool:
+        return time.monotonic() - ctx.t0 > self.budget_s
+
+
+class VNSLadder(Middleware):
+    """Chunk-size variable-neighbourhood shaking (§6 extension): a stall of
+    ``patience`` unaccepted chunks escalates to the next (smaller) rung;
+    any acceptance resets to the base neighbourhood."""
+
+    def __init__(self, s: int, ladder, patience: int):
+        self.ladder = (s,) + tuple(ladder)
+        self.patience = patience
+
+    def transform_chunk(self, ctx, cid, chunk):
+        s_now = self.ladder[ctx.rung]
+        if chunk.shape[0] > s_now:
+            chunk = chunk[:s_now]           # VNS: shrink the neighbourhood
+        return chunk
+
+    def after_window(self, ctx):
+        n_acc = int(np.sum(np.asarray(ctx.info.accepted)))
+        if n_acc:
+            ctx.rung, ctx.stall = 0, 0      # success -> base neighbourhood
+        elif len(self.ladder) > 1:
+            ctx.stall += int(np.size(np.asarray(ctx.info.accepted)))
+            if ctx.stall >= self.patience:
+                ctx.rung = min(ctx.rung + 1, len(self.ladder) - 1)
+                ctx.stall = 0
+
+
+class TraceLog(Middleware):
+    """Progress trace entries at the legacy cadence."""
+
+    def __init__(self, every: int, batch: int):
+        self.every = every
+        self.batch = batch
+
+    def after_window(self, ctx):
+        m = ctx.metrics
+        if ctx.info is None:            # window where no stream stepped
+            return
+        if self.every and m.chunks_done % self.every < self.batch:
+            m.trace.append(
+                (ctx.last_cid, float(np.asarray(ctx.state.f_best).min()),
+                 float(np.min(np.asarray(ctx.info.f_new)))))
+
+
+class FetchSkip(Middleware):
+    """Account for failed fetches: chunks are i.i.d. samples, so a lost one
+    is skipped (natively fault-tolerant) but never silently — the metrics
+    count it and the trace records the cause."""
+
+    def on_fetch_error(self, ctx, cid, err):
+        ctx.metrics.chunks_failed += 1
+        ctx.metrics.trace.append(("fetch_error", cid, err))
+
+
+class Checkpoint(Middleware):
+    """Persist the *full* loop state: ``((state, key), vns_aux)`` where
+    ``vns_aux = [rung, stall, last_s]``.
+
+    ``last_s`` makes the post-resume objective rescale exact (objectives are
+    sums over the chunk's points; comparing across sizes needs the incumbent
+    rescaled by the size ratio), and ``(rung, stall)`` resumes the VNS
+    ladder where it stopped instead of silently resetting it.  Checkpoints
+    written by older versions (no aux leaf) restore with ladder state reset
+    to the base rung.
+    """
+
+    def __init__(self, directory: str, every: int, batch: int,
+                 step_from: str = "chunks"):
+        # step_from: what a checkpoint "step" indexes — the next chunk id
+        # ("chunks", the stream loop's legacy semantics) or ctx.step
+        # ("step", the sharded rounds loop's window index).
+        self.directory = directory
+        self.every = every
+        self.batch = batch
+        self.step_from = step_from
+
+    def _step(self, ctx) -> int:
+        return ctx.step if self.step_from == "step" else ctx.last_cid + 1
+
+    def _payload(self, ctx):
+        aux = np.asarray([ctx.rung, ctx.stall, ctx.last_s], dtype=np.int64)
+        return ((ctx.state, ctx.key), aux)
+
+    def maybe_restore(self, ctx, example_state):
+        """Restore the latest checkpoint into ``ctx`` (state, key, step and
+        VNS loop state); no-op when the directory holds none."""
+        if ckpt_lib.latest_step(self.directory) is None:
+            return False
+        example_new = ((example_state, ctx.key),
+                       np.zeros(3, dtype=np.int64))
+        n = ckpt_lib.n_leaves(self.directory)
+        if n == len(jax.tree.flatten(example_new)[0]):
+            ((state, key), aux), step = ckpt_lib.restore(
+                self.directory, example_new)
+            aux = np.asarray(aux)
+            ctx.rung, ctx.stall = int(aux[0]), int(aux[1])
+            ctx.last_s = int(aux[2])
+        else:                       # legacy (state, key) checkpoint
+            (state, key), step = ckpt_lib.restore(
+                self.directory, (example_state, ctx.key))
+        ctx.state, ctx.key = state, key
+        ctx.step = ctx.start_step = step
+        return True
+
+    def after_window(self, ctx):
+        if (ctx.last_cid + 1) % self.every < self.batch:
+            ckpt_lib.save(self.directory, self._step(ctx),
+                          self._payload(ctx))
+
+    def on_finish(self, ctx):
+        ckpt_lib.save(self.directory, ctx.step, self._payload(ctx))
+
+
+def load_loop_state(directory: str):
+    """Debug/test helper: the VNS aux payload of the latest checkpoint, as
+    ``{'rung', 'stall', 'last_s'}`` (None for legacy checkpoints)."""
+    import os
+
+    step = ckpt_lib.latest_step(directory)
+    if step is None:
+        return None
+    n = ckpt_lib.n_leaves(directory, step)
+    data = np.load(os.path.join(
+        directory, f"step_{step:012d}", "arrays.npz"))
+    aux = data[f"a{n - 1}"]                 # the aux leaf flattens last
+    if aux.shape != (3,):
+        return None
+    return {"rung": int(aux[0]), "stall": int(aux[1]), "last_s": int(aux[2])}
+
+
+def default_stack(cfg, *, for_streaming: bool = True) -> MiddlewareStack:
+    """The streaming runner's historical capability set, as a stack.
+
+    Order matters: VNS (policy) first, then observers (trace, checkpoint),
+    then the stop condition.
+    """
+    mws: list[Middleware] = []
+    if for_streaming:
+        mws.append(FetchSkip())
+    if cfg.vns_ladder:
+        mws.append(VNSLadder(cfg.s, cfg.vns_ladder, cfg.vns_patience))
+    if cfg.log_every and for_streaming:
+        mws.append(TraceLog(cfg.log_every, cfg.batch))
+    if cfg.ckpt_dir:
+        mws.append(Checkpoint(cfg.ckpt_dir, cfg.ckpt_every, cfg.batch))
+    if cfg.time_budget_s is not None:
+        mws.append(TimeBudget(cfg.time_budget_s))
+    return MiddlewareStack(mws)

@@ -1,0 +1,77 @@
+"""Topology — *where* the chunk streams advance.
+
+A topology is a small frozen descriptor the engine dispatches on; the jitted
+``chunk_step`` / ``chunk_step_batched`` kernels are reused unchanged in every
+placement:
+
+* :class:`SingleDevice` — all streams on one device (batched or scalar).
+* :class:`StreamMesh` — the B-stream batch axis sharded over a 1-axis device
+  mesh; incumbent exchange is an argmin-all-gather.  Works for both the
+  in-core batched driver and (new) the out-of-core host loop, where the
+  prefetcher feeds device-sharded chunk stacks.
+* :class:`WorkerMesh` — one independent chunk stream per worker group of a
+  mesh (the multi-worker driver); exchange is a tiny argmin-all-reduce.
+
+Descriptors are hashable so they can ride through ``jax.jit`` static
+arguments exactly like the raw ``mesh`` objects did.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SingleDevice:
+    name: str = dataclasses.field(default="single", init=False)
+
+    @property
+    def devices(self) -> int:
+        return 1
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamMesh:
+    """Shard the stream (batch) axis of the batched step over ``mesh``."""
+
+    mesh: Any
+    axis: str = "streams"
+    name: str = dataclasses.field(default="stream_mesh", init=False)
+
+    @property
+    def devices(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerMesh:
+    """One chunk stream per group of the ``axes`` mesh axes."""
+
+    mesh: Any
+    axes: tuple = ("data",)
+    name: str = dataclasses.field(default="worker_mesh", init=False)
+
+    @property
+    def devices(self) -> int:
+        w = 1
+        for a in self.axes:
+            w *= int(self.mesh.shape[a])
+        return w
+
+
+Topology = SingleDevice | StreamMesh | WorkerMesh
+
+
+def for_streams(cfg) -> Topology:
+    """Stream-parallel topology from a config: ``cfg.mesh`` shards the
+    stream axis, otherwise everything stays on one device."""
+    if cfg.mesh is not None:
+        return StreamMesh(cfg.mesh, cfg.stream_axis)
+    return SingleDevice()
+
+
+def for_workers(cfg, mesh=None) -> WorkerMesh:
+    mesh = mesh if mesh is not None else cfg.mesh
+    if mesh is None:
+        raise ValueError("worker topology needs a device mesh")
+    return WorkerMesh(mesh, tuple(mesh.axis_names))

@@ -1,0 +1,471 @@
+"""Execution-engine parity and composition tests.
+
+The load-bearing guarantees of the scheduler/topology/sync-policy refactor:
+
+* the legacy drivers are thin engine assemblies with **bit-identical**
+  trajectories on the reference path (sequential / batched / sharded);
+* the host-orchestrated sharded windows (`worker_sharded_rounds`) replay
+  the one-shot sharded driver exactly, and compose with checkpoint/resume
+  and stop conditions — the previously-impossible "sharded + checkpoints";
+* the streaming loop's checkpoint carries the *full* loop state (VNS rung /
+  stall / last chunk size), so an interrupted+resumed run equals an
+  uninterrupted one bit-for-bit;
+* budget stops account for fetched-but-unstepped chunks
+  (``done + failed + dropped == fetched``);
+* ``competitive_s`` races per-stream sample sizes and reallocates toward
+  the winner (arXiv:2403.18766);
+* streaming + stream-mesh (out-of-core data on a multi-device mesh) matches
+  single-device streaming to fp tolerance — exercised in a forced-4-device
+  subprocess.
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import BigMeansConfig, fit
+from repro.cluster import checkpoint, runner
+from repro.core import big_means, big_means_batched, big_means_sharded
+from repro.data.synthetic import GMMSpec, gmm_chunk, gmm_dataset
+from repro.engine import (
+    CompetitiveS,
+    Checkpoint,
+    Middleware,
+    TimeBudget,
+    get_scheduler,
+    incore,
+    list_schedulers,
+    load_loop_state,
+    periodic,
+    competitive,
+)
+from repro.launch.mesh import make_mesh
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+X = gmm_dataset(GMMSpec(m=8000, n=8, components=5, seed=21))
+SPEC = GMMSpec(m=10**6, n=8, components=5, seed=3)
+
+
+def provider(cid):
+    return np.asarray(gmm_chunk(SPEC, cid, 1024))
+
+
+# ---------------------------------------------------------------------------
+# engine <-> legacy-driver parity (bit-identical on the ref path)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_sequential_parity():
+    key = jax.random.PRNGKey(3)
+    st_l, inf_l = big_means(X, key, k=5, s=600, n_chunks=8, impl="ref")
+    st_e, inf_e = incore.sequential(X, key, k=5, s=600, n_chunks=8,
+                                    impl="ref")
+    np.testing.assert_array_equal(np.asarray(st_l.centroids),
+                                  np.asarray(st_e.centroids))
+    assert float(st_l.f_best) == float(st_e.f_best)
+    np.testing.assert_array_equal(np.asarray(inf_l.f_new),
+                                  np.asarray(inf_e.f_new))
+
+
+def test_engine_batched_parity():
+    key = jax.random.PRNGKey(4)
+    st_l, inf_l = big_means_batched(X, key, k=5, s=600, batch=4, rounds=4,
+                                    sync_every=2, impl="ref")
+    st_e, inf_e = incore.batched_local(
+        X, key, k=5, s=600, batch=4, rounds=4, sync_every=2, max_iters=300,
+        tol=1e-4, candidates=3, impl="ref", with_replacement=True)
+    np.testing.assert_array_equal(np.asarray(st_l.centroids),
+                                  np.asarray(st_e.centroids))
+    assert float(st_l.f_best) == float(st_e.f_best)
+    np.testing.assert_array_equal(np.asarray(inf_l.accepted),
+                                  np.asarray(inf_e.accepted))
+
+
+def test_engine_facade_parity():
+    """The api strategies are engine assemblies: `fit` == direct driver."""
+    cfg = BigMeansConfig(k=5, s=600, n_chunks=8, impl="ref", seed=5)
+    r = fit(X, cfg, method="sequential")
+    st, _ = big_means(X, jax.random.PRNGKey(5), k=5, s=600, n_chunks=8,
+                      impl="ref")
+    np.testing.assert_array_equal(np.asarray(r.centroids),
+                                  np.asarray(st.centroids))
+    assert r.objective == float(st.f_best)
+
+
+def test_sharded_rounds_parity_single_device_mesh():
+    """Host-orchestrated sync windows replay the one-shot jitted sharded
+    driver bit-for-bit (worker mesh of this host's devices)."""
+    mesh = make_mesh((1,), ("data",))
+    key = jax.random.PRNGKey(0)
+    st1, inf1 = big_means_sharded(
+        X, key, mesh=mesh, k=5, s=500, chunks_per_worker=8, sync_every=2,
+        impl="ref")
+    st2, inf2, ctx = incore.worker_sharded_rounds(
+        X, key, mesh=mesh, k=5, s=500, chunks_per_worker=8, sync_every=2,
+        impl="ref")
+    assert ctx.step == 4
+    np.testing.assert_array_equal(np.asarray(st1.centroids),
+                                  np.asarray(st2.centroids))
+    assert float(st1.f_best) == float(st2.f_best)
+    np.testing.assert_array_equal(np.asarray(inf1.f_new),
+                                  np.asarray(inf2.f_new))
+    np.testing.assert_allclose(float(st1.n_dist_evals),
+                               float(st2.n_dist_evals), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sharded + checkpoint/resume (previously impossible)
+# ---------------------------------------------------------------------------
+
+
+class _StopAfter(Middleware):
+    def __init__(self, n_rounds):
+        self.n = n_rounds
+
+    def should_stop(self, ctx):
+        return ctx.step >= self.n
+
+
+def test_sharded_checkpoint_resume_bitwise(tmp_path):
+    mesh = make_mesh((1,), ("data",))
+    key = jax.random.PRNGKey(0)
+    kwargs = dict(mesh=mesh, k=5, s=500, chunks_per_worker=8, sync_every=2,
+                  impl="ref")
+    st_ref, _ = big_means_sharded(X, key, **kwargs)
+
+    d = str(tmp_path)
+    mws = [Checkpoint(d, 1, 2, step_from="step"), _StopAfter(2)]
+    _, _, ctx_a = incore.worker_sharded_rounds(
+        X, key, middlewares=mws, **kwargs)
+    assert ctx_a.step == 2                      # interrupted mid-run
+    st_b, inf_b, ctx_b = incore.worker_sharded_rounds(
+        X, key, middlewares=[Checkpoint(d, 1, 2, step_from="step")], **kwargs)
+    assert ctx_b.start_step == 2                # resumed, not restarted
+    assert ctx_b.step == 4
+    # the resumed process ran windows 2-3 only: 2 windows x sync_every chunks
+    assert int(np.asarray(inf_b.f_new).size) == 4
+    np.testing.assert_array_equal(np.asarray(st_b.centroids),
+                                  np.asarray(st_ref.centroids))
+    assert float(st_b.f_best) == float(st_ref.f_best)
+
+
+def test_sharded_strategy_with_checkpoint(tmp_path):
+    """The facade composition: method='sharded' + ckpt_dir runs the
+    host-orchestrated windows and leaves a resumable checkpoint."""
+    workers = len(jax.devices())     # the strategy meshes over all devices
+    cfg = BigMeansConfig(k=5, s=500, n_chunks=8 * workers, sync_every=2,
+                         impl="ref", ckpt_dir=str(tmp_path), ckpt_every=1,
+                         seed=0)
+    r = fit(X, cfg, method="sharded")
+    assert r.strategy == "sharded"
+    assert r.extras["rounds_done"] >= 1
+    assert checkpoint.latest_step(str(tmp_path)) is not None
+    st_ref, _ = big_means_sharded(
+        X, jax.random.PRNGKey(0), mesh=make_mesh((workers,), ("data",)),
+        k=5, s=500, chunks_per_worker=8, sync_every=2, impl="ref")
+    np.testing.assert_array_equal(np.asarray(r.centroids),
+                                  np.asarray(st_ref.centroids))
+
+
+# ---------------------------------------------------------------------------
+# streaming checkpoint: full loop state (VNS rung/stall, last_s)
+# ---------------------------------------------------------------------------
+
+
+def _fixed_provider():
+    fixed = np.asarray(gmm_chunk(SPEC, 0, 1024))
+    return lambda cid: fixed        # identical chunks: acceptance stalls
+
+
+def test_streaming_resume_preserves_vns_state(tmp_path):
+    prov = _fixed_provider()
+    base = dict(k=5, s=1024, vns_ladder=(512, 256), vns_patience=3, seed=7,
+                prefetch=0, log_every=0, ckpt_every=100)
+    d_full, d_res = str(tmp_path / "full"), str(tmp_path / "res")
+
+    st_full, _ = runner.run(
+        prov, BigMeansConfig(n_chunks=14, ckpt_dir=d_full, **base),
+        n_features=8)
+    aux_full = load_loop_state(d_full)
+
+    runner.run(prov, BigMeansConfig(n_chunks=7, ckpt_dir=d_res, **base),
+               n_features=8)
+    aux_mid = load_loop_state(d_res)
+    assert aux_mid is not None      # rung/stall/last_s persisted
+    st_res, _ = runner.run(
+        prov, BigMeansConfig(n_chunks=14, ckpt_dir=d_res, **base),
+        n_features=8)
+
+    # interrupted + resumed == uninterrupted, ladder state included
+    np.testing.assert_array_equal(np.asarray(st_full.centroids),
+                                  np.asarray(st_res.centroids))
+    assert float(st_full.f_best) == float(st_res.f_best)
+    assert load_loop_state(d_res) == aux_full
+
+
+def test_streaming_resume_accepts_legacy_checkpoints(tmp_path):
+    """Checkpoints written before the aux payload (plain (state, key))
+    still restore — with ladder state reset, not a crash."""
+    from repro.core import bigmeans
+
+    d = str(tmp_path)
+    cfg = BigMeansConfig(k=5, s=1024, n_chunks=6, ckpt_dir=d, seed=1,
+                         prefetch=0)
+    state = bigmeans.init_state(5, 8)
+    key = jax.random.PRNGKey(1)
+    checkpoint.save(d, 3, (state, key))         # legacy 6-leaf payload
+    st, m = runner.run(provider, cfg, n_features=8)
+    assert m.chunks_done == 3                   # resumed from chunk 3
+    assert np.isfinite(m.f_best)
+
+
+# ---------------------------------------------------------------------------
+# budget-stop accounting (done + failed + dropped == fetched)
+# ---------------------------------------------------------------------------
+
+
+def test_budget_stop_accounts_dropped_chunks():
+    data = np.asarray(gmm_chunk(SPEC, 0, 512))
+    fetched = []
+
+    def slow_provider(cid):
+        fetched.append(cid)
+        if cid == 2:
+            time.sleep(0.6)
+        return data
+
+    cfg = BigMeansConfig(k=5, s=512, n_chunks=10, batch=3,
+                         time_budget_s=0.3, prefetch=0, seed=1)
+    # warm the jitted path so compile time cannot eat the budget first
+    fit(data, BigMeansConfig(k=5, s=512, n_chunks=1, seed=1),
+        method="sequential")
+    _, m = runner.run(slow_provider, cfg, n_features=8)
+    drops = [t for t in m.trace if t[0] == "budget_drop"]
+    assert m.chunks_dropped == sum(len(t[1]) for t in drops)
+    # with prefetch=0 the provider is called exactly once per consumed
+    # chunk, so the reconciliation invariant is exact
+    assert m.chunks_done + m.chunks_failed + m.chunks_dropped == len(fetched)
+    if m.chunks_dropped:                        # the budget fired mid-batch
+        assert drops and isinstance(drops[0][1], tuple)
+
+
+def test_persistent_streams_skip_short_tail_chunk():
+    """A ragged tail chunk in persistent-stream mode is skipped with
+    accounting (trace + chunks_dropped), not a crash."""
+    data = np.asarray(gmm_chunk(SPEC, 0, 1024))
+
+    def provider_short_tail(cid):
+        return data[:100] if cid == 7 else data
+
+    cfg = BigMeansConfig(k=5, s=1024, n_chunks=8, batch=2, sync_every=2,
+                         prefetch=0, seed=1)
+    st, m = runner.run(provider_short_tail, cfg, n_features=8)
+    assert m.chunks_done == 7
+    assert m.chunks_dropped == 1
+    assert ("short_chunk", 7, 100, 1024) in m.trace
+    assert m.chunks_done + m.chunks_failed + m.chunks_dropped == 8
+    assert np.isfinite(float(st.f_best))
+
+
+def test_worker_scheduler_streams_like_uniform():
+    """Every registered scheduler exposes the full stream-loop interface;
+    'worker' (the sharded drivers' descriptor) behaves like 'uniform'."""
+    cfg = BigMeansConfig(k=5, s=1024, n_chunks=8, batch=2, sync_every=2,
+                         scheduler="worker", prefetch=0, seed=1)
+    r = fit(provider, cfg, method="streaming", n_features=8)
+    assert r.n_chunks == 8
+    assert np.isfinite(r.objective)
+
+
+# ---------------------------------------------------------------------------
+# sync policies & persistent streams
+# ---------------------------------------------------------------------------
+
+
+def test_sync_policy_resolution():
+    assert periodic(3).resolve(12) == 3
+    assert competitive().resolve(12) == 12
+    assert periodic(1).boundary(0) and periodic(2).boundary(1)
+    assert not periodic(2).boundary(0)
+    assert not competitive().boundary(10**6)
+
+
+def test_streaming_persistent_streams_runs():
+    """batch > 1 with periodic/competitive sync keeps per-stream incumbents
+    across batches (out-of-core competitive mode, previously impossible)."""
+    cfg = BigMeansConfig(k=5, s=1024, n_chunks=16, batch=4, sync_every=2,
+                         seed=1)
+    r = fit(provider, cfg, method="streaming", n_features=8)
+    assert r.n_chunks == 16
+    assert np.isfinite(r.objective)
+    r2 = fit(provider, cfg.replace(sync="competitive"), method="streaming",
+             n_features=8)
+    assert r2.n_chunks == 16
+    assert np.isfinite(r2.objective)
+
+
+def test_streaming_surfaces_lloyd_iterations():
+    cfg = BigMeansConfig(k=5, s=1024, n_chunks=6, seed=2)
+    r = fit(provider, cfg, method="streaming", n_features=8)
+    assert r.n_iterations > 0                   # no longer hard-coded 0
+
+
+# ---------------------------------------------------------------------------
+# competitive_s scheduler (arXiv:2403.18766)
+# ---------------------------------------------------------------------------
+
+
+def test_competitive_s_registered():
+    assert "competitive_s" in list_schedulers()
+    sched = get_scheduler(
+        "competitive_s",
+        BigMeansConfig(k=5, s=1024, batch=4, scheduler="competitive_s"))
+    assert isinstance(sched, CompetitiveS)
+    assert sched.fetch_s == max(sched.ladder)
+
+
+def test_competitive_s_reallocates_toward_winner():
+    sched = CompetitiveS(ladder=(256, 512, 1024), batch=6)
+    sizes = sched.sizes(6)
+    # common-eval scores: 512 the clear winner, 1024 the loser
+    f = [1.0 if s == 512 else (3.0 if s == 1024 else 2.0) for s in sizes]
+    moves = sched.observe_window(f, sizes)
+    assert len(moves) == 1
+    b, new_s, clone_from = moves[0]
+    assert new_s == 512 and sizes[b] == 1024 and sizes[clone_from] == 512
+    assert sched.s_of.count(512) == sizes.count(512) + 1
+
+
+def test_competitive_s_end_to_end():
+    # array source: the engine fetches at max(ladder) and slices per stream
+    cfg = BigMeansConfig(k=5, s=1024, n_chunks=24, batch=4, sync_every=2,
+                         scheduler="competitive_s",
+                         competitive_ladder=(512, 1024, 2048), seed=1)
+    r = fit(X, cfg, method="streaming")
+    assert r.n_chunks == 24
+    info = r.extras["competitive_s"]
+    assert info["ladder"] == (512, 1024, 2048)
+    assert info["windows"] >= 1
+    assert len(info["final_sizes"]) == 4
+    assert np.isfinite(r.objective)
+
+
+def test_competitive_s_validation():
+    with pytest.raises(ValueError, match="batch >= 2"):
+        BigMeansConfig(k=5, s=1024, batch=1, scheduler="competitive_s")
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        BigMeansConfig(k=5, s=1024, scheduler="nope")
+
+
+# ---------------------------------------------------------------------------
+# auto strategy: compatible sync_every derivation
+# ---------------------------------------------------------------------------
+
+
+def test_auto_derives_compatible_sync_every(monkeypatch):
+    import repro.api.strategies as S
+
+    calls = {}
+
+    def spy(cfg, source, key):
+        calls["sync_every"] = cfg.sync_every
+        return fit(X, cfg.replace(mesh=None), method="sequential")
+
+    monkeypatch.setattr(jax, "devices", lambda: [object()] * 4)
+    monkeypatch.setitem(S._STRATEGIES, "sharded", spy)
+    cfg = BigMeansConfig(k=5, s=600, n_chunks=8, sync_every=3, impl="ref")
+    # 4 workers -> 2 chunks/worker; sync_every=3 does not divide 2:
+    # auto derives the largest divisor <= 3 instead of downgrading
+    assert S.resolve_auto(cfg, __import__(
+        "repro.api.sources", fromlist=["as_source"]).as_source(X)) == "sharded"
+    r = S._fit_auto(cfg, __import__(
+        "repro.api.sources", fromlist=["as_source"]).as_source(X),
+        jax.random.PRNGKey(0))
+    assert calls["sync_every"] == 2
+    assert r.extras["sync_every_adjusted"] == {"requested": 3, "used": 2}
+
+
+# ---------------------------------------------------------------------------
+# multi-device compositions (forced 4 host devices, separate process)
+# ---------------------------------------------------------------------------
+
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+import jax
+from repro.api import BigMeansConfig, fit
+from repro.core import big_means_sharded
+from repro.engine import incore
+from repro.launch.mesh import make_mesh
+from repro.data.synthetic import GMMSpec, gmm_chunk, gmm_dataset
+
+SPEC = GMMSpec(m=10**6, n=8, components=5, seed=3)
+def provider(cid):
+    return np.asarray(gmm_chunk(SPEC, cid, 1024))
+
+out = {"n_devices": len(jax.devices())}
+
+# streaming + stream mesh == streaming single-device (fp tolerance)
+mesh = make_mesh((4,), ("streams",))
+cfg1 = BigMeansConfig(k=5, s=1024, n_chunks=16, batch=4, seed=1, impl="ref")
+r1 = fit(provider, cfg1, method="streaming", n_features=8)
+r2 = fit(provider, cfg1.replace(mesh=mesh), method="streaming", n_features=8)
+out["stream_mesh_matches"] = bool(
+    np.allclose(r1.objective, r2.objective, rtol=1e-5)
+    and np.allclose(np.asarray(r1.centroids), np.asarray(r2.centroids),
+                    rtol=1e-4, atol=1e-4))
+
+# persistent streams over the mesh too
+cfg2 = cfg1.replace(sync_every=2)
+r3 = fit(provider, cfg2, method="streaming", n_features=8)
+r4 = fit(provider, cfg2.replace(mesh=mesh), method="streaming", n_features=8)
+out["stream_mesh_persistent_matches"] = bool(
+    np.allclose(r3.objective, r4.objective, rtol=1e-5))
+
+# sharded rounds parity on a real 4-worker mesh
+X = gmm_dataset(GMMSpec(m=16000, n=8, components=5, seed=2))
+wmesh = make_mesh((4,), ("data",))
+key = jax.random.PRNGKey(0)
+st1, inf1 = big_means_sharded(X, key, mesh=wmesh, k=5, s=800,
+                              chunks_per_worker=6, sync_every=2, impl="ref")
+st2, inf2, ctx = incore.worker_sharded_rounds(
+    X, key, mesh=wmesh, k=5, s=800, chunks_per_worker=6, sync_every=2,
+    impl="ref")
+out["sharded_rounds_match"] = bool(
+    float(st1.f_best) == float(st2.f_best)
+    and np.array_equal(np.asarray(st1.centroids), np.asarray(st2.centroids))
+    and np.array_equal(np.asarray(inf1.f_new), np.asarray(inf2.f_new)))
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def mesh_result():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _MESH_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+@pytest.mark.slow
+def test_streaming_mesh_matches_single_device(mesh_result):
+    assert mesh_result["n_devices"] == 4
+    assert mesh_result["stream_mesh_matches"]
+    assert mesh_result["stream_mesh_persistent_matches"]
+
+
+@pytest.mark.slow
+def test_sharded_rounds_parity_multi_device(mesh_result):
+    assert mesh_result["sharded_rounds_match"]
