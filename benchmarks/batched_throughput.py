@@ -37,7 +37,6 @@ from __future__ import annotations
 
 import argparse
 import csv
-import json
 import os
 
 # Expose the host's cores as XLA devices so the stream-mesh row can shard
@@ -200,9 +199,10 @@ def main() -> None:
                     default="all", help="which sweep(s) to run")
     args = ap.parse_args()
 
+    from repro.evalsuite import schema as bench_schema
+
     total = 64 if args.fast else 128
     reps = 2 if args.fast else 5
-    host = {"cpu_count": os.cpu_count(), "xla_devices": len(jax.devices())}
     protocol = "steady-state: median pairwise (2R-R) round deltas"
     os.makedirs(os.path.join(REPO, "results"), exist_ok=True)
 
@@ -215,15 +215,14 @@ def main() -> None:
             w.writeheader()
             w.writerows(rows)
 
-        json_path = os.path.join(REPO, "BENCH_batched.json")
-        with open(json_path, "w") as f:
-            json.dump({
-                "shape": {"k": K, "n": N, "s": S},
-                "impl": "ref",
-                "host": host,
-                "protocol": protocol,
-                "rows": rows,
-            }, f, indent=1)
+        json_path = bench_schema.write_bench(
+            os.path.join(REPO, "BENCH_batched.json"),
+            bench_schema.envelope(
+                "batched_throughput", rows,
+                shape={"k": K, "n": N, "s": S},
+                impl="ref",
+                protocol=protocol,
+            ))
         print(f"# wrote {json_path}")
 
     if args.matrix in ("all", "precision"):
@@ -235,22 +234,21 @@ def main() -> None:
             w.writeheader()
             w.writerows(prows)
 
-        json_path = os.path.join(REPO, "BENCH_precision.json")
-        with open(json_path, "w") as f:
-            json.dump({
-                "shape": {"k": K, "n": N, "s": S},
-                "impl": "ref",
-                "host": host,
-                "protocol": protocol,
-                "bytes_model": "bytes_per_chunk = s*n*itemsize (one streamed "
-                               "pass); total traffic ~ bytes_per_chunk * "
-                               "(lloyd_iters_per_chunk + 2)",
-                "note": "CPU host: bf16 matmuls are emulated, so bf16 rows "
-                        "can measure slower; bytes_per_chunk is the "
-                        "hardware-independent 2x win realized on "
-                        "bandwidth-bound accelerators.",
-                "rows": prows,
-            }, f, indent=1)
+        json_path = bench_schema.write_bench(
+            os.path.join(REPO, "BENCH_precision.json"),
+            bench_schema.envelope(
+                "precision_matrix", prows,
+                shape={"k": K, "n": N, "s": S},
+                impl="ref",
+                protocol=protocol,
+                bytes_model="bytes_per_chunk = s*n*itemsize (one streamed "
+                            "pass); total traffic ~ bytes_per_chunk * "
+                            "(lloyd_iters_per_chunk + 2)",
+                note="CPU host: bf16 matmuls are emulated, so bf16 rows "
+                     "can measure slower; bytes_per_chunk is the "
+                     "hardware-independent 2x win realized on "
+                     "bandwidth-bound accelerators.",
+            ))
         print(f"# wrote {json_path}")
 
 

@@ -28,14 +28,10 @@ import json
 import os
 import time
 
-import numpy as np
-
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def main(fast: bool = False):
-    import jax
-
     from repro.api import BigMeansConfig, evaluate, fit
     from repro.data.synthetic import GMMSpec, gmm_dataset
 
@@ -100,21 +96,19 @@ def main(fast: bool = False):
         "competitive_vs_best_fixed": round(comp / best_fixed, 4),
         "competitive_vs_worst_fixed": round(comp / worst_fixed, 4),
     }
-    out = {
-        "bench": "engine_compare",
-        "dataset": {"m": m, "n": n, "components": k},
-        "k": k,
-        "ladder": list(ladder),
-        "equal_chunk_budget": n_chunks,
-        "impl": "ref",
-        "host": {"cpu_count": os.cpu_count(),
-                 "xla_devices": len(jax.devices())},
-        "rows": rows,
-        "summary": summary,
-    }
-    path = os.path.join(REPO, "BENCH_engine.json")
-    with open(path, "w") as f:
-        json.dump(out, f, indent=1)
+    from repro.evalsuite import schema as bench_schema
+
+    out = bench_schema.envelope(
+        "engine_compare", rows,
+        dataset={"m": m, "n": n, "components": k},
+        k=k,
+        ladder=list(ladder),
+        equal_chunk_budget=n_chunks,
+        impl="ref",
+        summary=summary,
+    )
+    path = bench_schema.write_bench(
+        os.path.join(REPO, "BENCH_engine.json"), out)
     os.makedirs(os.path.join(REPO, "results"), exist_ok=True)
     csv_path = os.path.join(REPO, "results", "engine_compare.csv")
     keys = ["variant", "scheduler", "s", "batch", "n_chunks", "chunks_done",

@@ -185,6 +185,17 @@ def fit(
         result = fn(cfg, source, key)
         jax.block_until_ready(result.centroids)
         result.wall_time_s = time.monotonic() - t0
+        # Suite hook: how this fit was actually dispatched, in one
+        # JSON-safe record (evalsuite and benchmarks read it off
+        # `FitResult.to_row()` instead of re-deriving resolution logic).
+        result.extras["fit"] = {
+            "method": method,
+            "impl": cfg.resolved_impl(),
+            "precision": cfg.precision,
+            "autotune": cfg.autotune,
+            "seed": int(cfg.seed),
+            "source": type(source).__name__,
+        }
     finally:
         if prev_tuning is not None:
             from repro.kernels import autotune

@@ -64,6 +64,24 @@ class FitResult:
     def n_features(self) -> int:
         return self.centroids.shape[1]
 
+    def to_row(self) -> dict:
+        """A flat, JSON-safe record of this fit (the evalsuite/benchmark
+        row contract — everything scalar, nothing device-resident)."""
+        nd = self.n_dist_evals
+        return {
+            "algorithm": self.algorithm,
+            "strategy": self.strategy,
+            "objective": float(self.objective),
+            "k": int(self.k),
+            "n_features": int(self.n_features),
+            "n_chunks": int(self.n_chunks),
+            "n_accepted": int(self.n_accepted),
+            "n_iterations": int(self.n_iterations),
+            "n_dist_evals": None if math.isnan(nd) else float(nd),
+            "wall_time_s": float(self.wall_time_s),
+            "fit": self.extras.get("fit"),
+        }
+
     def summary(self) -> str:
         via = f" via {self.strategy}" if self.strategy else ""
         nd = ("n_d=nan" if math.isnan(self.n_dist_evals)

@@ -1,2 +1,2 @@
-from repro.data.synthetic import gmm_dataset, paper_surrogate
+from repro.data.synthetic import gmm_dataset, gmm_memmap, paper_surrogate
 from repro.data.normalize import minmax_normalize

@@ -44,12 +44,40 @@ def gmm_chunk(spec: GMMSpec, chunk_id: int, chunk_size: int) -> jax.Array:
     return means[comp] + noise
 
 
+# Generation width shared by gmm_dataset and gmm_memmap.  gmm_chunk folds
+# the chunk *id* into the PRNG, so rows depend on this width: both
+# materializers must use the same value or they produce different data.
+_GEN_CHUNK = 1 << 16
+
+
 def gmm_dataset(spec: GMMSpec) -> jax.Array:
     """Materialize the full [m, n] dataset (in-core use)."""
-    chunk = 1 << 16
+    chunk = _GEN_CHUNK
     nchunks = -(-spec.m // chunk)
     parts = [np.asarray(gmm_chunk(spec, i, chunk)) for i in range(nchunks)]
     return jnp.asarray(np.concatenate(parts, axis=0)[: spec.m])
+
+
+def gmm_memmap(spec: GMMSpec, path: str) -> str:
+    """Materialize the dataset to an on-disk ``.npy`` memmap, chunk by chunk.
+
+    Bounded RAM (one generation chunk at a time) and bitwise deterministic
+    for a given (spec, backend).  The generation chunking is pinned to
+    ``gmm_dataset``'s (``_GEN_CHUNK``), so the memmap holds byte-identical
+    rows to the in-core path.  Returns ``path``.
+    """
+    chunk = _GEN_CHUNK
+    out = np.lib.format.open_memmap(
+        path, mode="w+", dtype=np.float32, shape=(spec.m, spec.n))
+    nchunks = -(-spec.m // chunk)
+    for i in range(nchunks):
+        lo = i * chunk
+        hi = min(lo + chunk, spec.m)
+        out[lo:hi] = np.asarray(gmm_chunk(spec, i, chunk),
+                                dtype=np.float32)[: hi - lo]
+    out.flush()
+    del out
+    return path
 
 
 # (m, n) signatures of the paper's datasets (Table 1), used as surrogate

@@ -1,0 +1,49 @@
+"""`repro.evalsuite` — the §5 reproduction & regression harness.
+
+The paper's empirical claim is two-dimensional: Big-means must match or
+beat the §5 baselines on *solution quality* (relative clustering error
+ε = (f − f*)/f* against a best-known objective f*) while spending less
+time under an equal data budget.  This package makes that claim a gated,
+versioned artifact instead of a pile of ad-hoc benchmark scripts:
+
+* :mod:`repro.evalsuite.datasets` — the dataset registry: deterministic
+  GMM surrogates at paper-like shapes, on-disk memmap materialization,
+  and a committed best-known objective ``f_star`` per dataset.
+* :mod:`repro.evalsuite.metrics` — ε, success rate over seeds, and
+  run-level time-to-target curves.
+* :mod:`repro.evalsuite.schema` — the versioned JSON schema every
+  ``BENCH_*.json`` artifact is validated against before it is written.
+* :mod:`repro.evalsuite.suite` — the suite runner: Big-means strategies
+  × precision × scheduler plus the §5 baseline registry, swept over the
+  dataset registry under an equal chunk budget through ``repro.api.fit``.
+* :mod:`repro.evalsuite.gate` — the regression gate: diff a fresh suite
+  run against the committed ``results/BENCH_baseline.json`` with
+  per-metric tolerances; non-zero exit on quality or runtime regression.
+
+CLI entry points::
+
+    PYTHONPATH=src python -m benchmarks.suite --quick
+    PYTHONPATH=src python -m repro.evalsuite.gate \
+        --baseline results/BENCH_baseline.json --fresh BENCH_suite.json
+"""
+from repro.evalsuite.datasets import DatasetSpec, get_dataset, list_datasets
+from repro.evalsuite.metrics import (
+    aggregate_cell,
+    relative_error,
+    success_rate,
+    time_to_target_curve,
+)
+from repro.evalsuite.schema import SCHEMA_VERSION, check, validate
+
+__all__ = [
+    "DatasetSpec",
+    "SCHEMA_VERSION",
+    "aggregate_cell",
+    "check",
+    "get_dataset",
+    "list_datasets",
+    "relative_error",
+    "success_rate",
+    "time_to_target_curve",
+    "validate",
+]
