@@ -181,10 +181,21 @@ def fit(
         if key is None:
             key = jax.random.PRNGKey(cfg.seed)
 
+        from repro.kernels import ops as _ops
+
+        n_demotions = len(_ops.kernel_demotions())
         t0 = time.monotonic()
         result = fn(cfg, source, key)
         jax.block_until_ready(result.centroids)
         result.wall_time_s = time.monotonic() - t0
+        # Graceful kernel degradation taken during this call surfaces on
+        # the result: trace events + the run-health summary.
+        fallbacks = _ops.kernel_demotions()[n_demotions:]
+        for d in fallbacks:
+            result.trace.append(("kernel_fallback", d["op"], d["error"]))
+        if fallbacks:
+            result.extras.setdefault("health", {})["kernel_fallbacks"] = \
+                fallbacks
         # Suite hook: how this fit was actually dispatched, in one
         # JSON-safe record (evalsuite and benchmarks read it off
         # `FitResult.to_row()` instead of re-deriving resolution logic).

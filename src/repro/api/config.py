@@ -71,6 +71,22 @@ class BigMeansConfig:
     * ``ckpt_dir`` / ``ckpt_every`` / ``resume`` — checkpointing.
     * ``log_every`` — trace granularity.
     * ``vns_ladder`` / ``vns_patience`` — chunk-size VNS extension (§6).
+
+    Fault tolerance (streaming; see :mod:`repro.engine.faults`):
+
+    * ``retries`` — re-attempts per chunk fetch for *transient* errors
+      (timeouts, lost nodes), with exponential backoff and deterministic
+      jitter; permanent errors (malformed data, contract violations) fail
+      immediately.  0 = the legacy drop-the-chunk behaviour, bit-for-bit.
+    * ``retry_backoff_s`` — base backoff delay (doubles per attempt,
+      capped at 2s).
+    * ``fetch_timeout_s`` — watchdog bound per provider call; a hung fetch
+      becomes a retryable fault and the prefetch worker is always
+      reclaimable.  None = no watchdog.
+    * ``validate_chunks`` — sanitize chunks (finiteness, shape) before
+      acceptance, quarantining bad ones (``("quarantine", cid, reason)``
+      trace events + ``chunks_quarantined``), and enforce the post-accept
+      invariant that ``f_best`` stays finite and monotone non-increasing.
     """
 
     k: int
@@ -102,6 +118,11 @@ class BigMeansConfig:
     seed: int = 0
     vns_ladder: tuple = ()
     vns_patience: int = 10
+    # --- fault tolerance (see repro.engine.faults)
+    retries: int = 0
+    retry_backoff_s: float = 0.05
+    fetch_timeout_s: float | None = None
+    validate_chunks: bool = True
 
     def __post_init__(self):
         def _positive(name, value):
@@ -130,6 +151,21 @@ class BigMeansConfig:
         if self.time_budget_s is not None and self.time_budget_s <= 0:
             raise ValueError(
                 f"time_budget_s must be positive, got {self.time_budget_s!r}")
+        if not isinstance(self.retries, int) or isinstance(self.retries, bool) \
+                or self.retries < 0:
+            raise ValueError(
+                f"retries must be an int >= 0, got {self.retries!r}")
+        if self.retry_backoff_s < 0:
+            raise ValueError(
+                f"retry_backoff_s must be >= 0, got {self.retry_backoff_s!r}")
+        if self.fetch_timeout_s is not None and self.fetch_timeout_s <= 0:
+            raise ValueError(
+                f"fetch_timeout_s must be positive, got "
+                f"{self.fetch_timeout_s!r}")
+        if not isinstance(self.validate_chunks, bool):
+            raise ValueError(
+                f"validate_chunks must be a bool, got "
+                f"{self.validate_chunks!r}")
         if self.impl != "auto" and self.impl not in ops.IMPLS:
             raise ValueError(
                 f"unknown impl {self.impl!r}; known: ('auto',) + {ops.IMPLS}")

@@ -32,10 +32,10 @@ class FitResult:
       algorithm does not track it).
     * ``trace`` — list of trace entries; Big-means strategies log
       ``(chunk_idx, f_new, accepted)`` triples, the streaming runner logs
-      ``(chunk_id, f_best, f_new)`` checkpoints,
-      ``("fetch_error", chunk_id, "ExcType: message")`` fetch failures and
-      ``("budget_drop", (chunk_ids...))`` for chunks fetched but dropped
-      un-stepped at a budget stop.
+      ``(chunk_id, f_best, f_new)`` checkpoints plus the structured fault
+      events (``fetch_error``, ``quarantine``, ``budget_drop``,
+      ``short_chunk``, ``ckpt_fallback``; ``fit`` appends
+      ``kernel_fallback`` — see the README trace-event glossary).
     * ``checkpoint_dir`` — where the run checkpointed, if anywhere.
     * ``config`` — the :class:`repro.api.BigMeansConfig` that ran.
     * ``extras`` — strategy-specific detail (resolved auto strategy, final
@@ -55,6 +55,15 @@ class FitResult:
     checkpoint_dir: str | None = None
     config: Any = None
     extras: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def health(self) -> dict | None:
+        """The run-health summary (streaming strategies): chunk accounting
+        (``done + failed + dropped + quarantined == fetched``), checkpoint
+        fallbacks and quarantine reasons; ``fit`` adds any
+        ``kernel_fallbacks`` taken during the call.  None when the strategy
+        does not stream."""
+        return self.extras.get("health")
 
     @property
     def k(self) -> int:

@@ -241,7 +241,23 @@ def _fit_streaming(cfg: BigMeansConfig, source: DataSource,
         provider, cfg, n_features=source.n_features, resume=cfg.resume,
         key=key, scheduler=scheduler)
     extras = {"chunks_failed": metrics.chunks_failed,
-              "chunks_dropped": metrics.chunks_dropped}
+              "chunks_dropped": metrics.chunks_dropped,
+              "chunks_quarantined": metrics.chunks_quarantined}
+    # Run-health summary: the reconciliation contract in one record —
+    # done + failed + dropped + quarantined == chunks fetched.
+    extras["health"] = {
+        "chunks_done": metrics.chunks_done,
+        "chunks_failed": metrics.chunks_failed,
+        "chunks_dropped": metrics.chunks_dropped,
+        "chunks_quarantined": metrics.chunks_quarantined,
+        "chunks_fetched": (metrics.chunks_done + metrics.chunks_failed
+                           + metrics.chunks_dropped
+                           + metrics.chunks_quarantined),
+        "ckpt_fallback": next(
+            (t[1] for t in metrics.trace if t[0] == "ckpt_fallback"), None),
+        "quarantine_reasons": [
+            (t[1], t[2]) for t in metrics.trace if t[0] == "quarantine"],
+    }
     if isinstance(scheduler, sched_lib.CompetitiveS):
         extras["competitive_s"] = {
             "ladder": scheduler.ladder,

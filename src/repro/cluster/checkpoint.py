@@ -1,13 +1,21 @@
 """Minimal, dependency-free checkpointing (orbax is not available offline).
 
 * atomic: write to ``<dir>/tmp.<step>`` then ``os.replace`` to ``step_<n>``;
+  stale ``tmp.*`` leftovers from a crashed save are cleaned on the next
+  :func:`save` and never considered by restore;
 * bounded: keeps the last ``keep`` checkpoints;
+* self-healing: ``meta.json`` records a SHA-256 digest per data file;
+  :func:`restore` verifies the newest checkpoint and falls back to the
+  newest *intact* ``step_*`` when it is corrupt (truncated write, bit rot)
+  instead of crashing the run or silently loading garbage.  Legacy
+  checkpoints without digests are verified by a read-back load instead;
 * elastic: arrays are stored as full logical values; ``restore`` re-shards
   with whatever sharding the caller passes — restarting on a different
   worker count / mesh shape needs no conversion step.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -21,18 +29,38 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
+def _clean_tmp(directory: str) -> None:
+    """Remove ``tmp.*`` leftovers from crashed saves: they are partial by
+    definition and must never shadow or outlive real ``step_*`` dirs."""
+    for entry in os.listdir(directory):
+        if entry.startswith("tmp."):
+            shutil.rmtree(os.path.join(directory, entry),
+                          ignore_errors=True)
+
+
 def save(directory: str, step: int, tree, *, keep: int = 3) -> str:
     os.makedirs(directory, exist_ok=True)
+    _clean_tmp(directory)
     tmp = os.path.join(directory, f"tmp.{step}")
     final = os.path.join(directory, f"step_{step:012d}")
     os.makedirs(tmp, exist_ok=True)
 
     leaves, treedef = _flatten(tree)
     arrays = {f"a{i}": np.asarray(x) for i, x in enumerate(leaves)}
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    arrays_path = os.path.join(tmp, "arrays.npz")
+    np.savez(arrays_path, **arrays)
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump({"step": step, "n_leaves": len(leaves),
-                   "treedef": str(treedef)}, f)
+                   "treedef": str(treedef),
+                   "digests": {"arrays.npz": _sha256(arrays_path)}}, f)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
@@ -41,6 +69,37 @@ def save(directory: str, step: int, tree, *, keep: int = 3) -> str:
     for stale in ckpts[:-keep]:
         shutil.rmtree(os.path.join(directory, stale))
     return final
+
+
+def steps(directory: str) -> list[int]:
+    """All stored checkpoint steps, ascending (``tmp.*`` never included)."""
+    if not os.path.isdir(directory):
+        return []
+    return sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                  if d.startswith("step_"))
+
+
+def verify_step(directory: str, step: int) -> bool:
+    """True iff the checkpoint at ``step`` is intact.
+
+    Digest-bearing checkpoints are verified against their recorded
+    SHA-256s; legacy checkpoints (no ``digests`` in ``meta.json``) fall
+    back to actually loading ``arrays.npz`` — slower, but a truncated file
+    still fails closed.
+    """
+    path = os.path.join(directory, f"step_{step:012d}")
+    try:
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        digests = meta.get("digests")
+        if digests is not None:
+            return all(
+                _sha256(os.path.join(path, name)) == want
+                for name, want in digests.items())
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            return len(data.files) == int(meta["n_leaves"])
+    except Exception:
+        return False
 
 
 def n_leaves(directory: str, step: int | None = None) -> int | None:
@@ -58,22 +117,33 @@ def n_leaves(directory: str, step: int | None = None) -> int | None:
 
 
 def latest_step(directory: str) -> int | None:
-    if not os.path.isdir(directory):
-        return None
-    ckpts = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
-    if not ckpts:
-        return None
-    return int(ckpts[-1].split("_")[1])
+    all_steps = steps(directory)
+    return all_steps[-1] if all_steps else None
+
+
+def latest_intact_step(directory: str) -> int | None:
+    """The newest step that passes :func:`verify_step` (None when every
+    stored checkpoint is corrupt or none exist)."""
+    for step in reversed(steps(directory)):
+        if verify_step(directory, step):
+            return step
+    return None
 
 
 def restore(directory: str, example_tree, *, step: int | None = None,
-            shardings=None):
+            shardings=None, verify: bool = True):
     """Load into the structure of ``example_tree``; optionally device_put with
-    ``shardings`` (same pytree structure or a single sharding)."""
+    ``shardings`` (same pytree structure or a single sharding).
+
+    With ``step=None`` and ``verify=True`` (the default), the newest
+    *intact* checkpoint is loaded — a corrupt newest step is skipped, not
+    served.  An explicit ``step`` is loaded as-is (debugging raw access).
+    """
     if step is None:
-        step = latest_step(directory)
+        step = latest_intact_step(directory) if verify \
+            else latest_step(directory)
     if step is None:
-        raise FileNotFoundError(f"no checkpoint under {directory}")
+        raise FileNotFoundError(f"no intact checkpoint under {directory}")
     path = os.path.join(directory, f"step_{step:012d}")
     data = np.load(os.path.join(path, "arrays.npz"))
     leaves, treedef = _flatten(example_tree)

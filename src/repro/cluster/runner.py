@@ -58,8 +58,13 @@ def run(
     fields; the deprecated :func:`RunnerConfig` shim builds one).  The
     scheduler (``cfg.scheduler``), topology (``cfg.mesh`` shards the stream
     axis) and sync policy (``cfg.sync`` / ``cfg.sync_every``) all come from
-    the config; middleware (checkpoint, VNS, budget, tracing, fetch skip)
-    is the default stack.
+    the config; middleware (checkpoint, VNS, budget, tracing, fetch skip,
+    chunk sanitizer + invariant guard) is the default stack, and the
+    fault-tolerance knobs (``cfg.retries`` / ``cfg.fetch_timeout_s`` /
+    ``cfg.validate_chunks`` — see :mod:`repro.engine.faults`) govern the
+    fetch pipeline.  ``fault_injector(cid)`` (raises to fail a fetch) is
+    the legacy injection hook; :class:`repro.engine.faults.FaultPlan` is
+    the generalized harness.
     """
     return run_stream(
         provider, cfg, n_features=n_features, resume=resume,

@@ -15,7 +15,10 @@ exactly one hand-rolled driver:
   periodic, competitive (``∞``) — the paper's parallel modes as data.
 * :mod:`repro.engine.middleware` — the accept-loop **middleware stack**:
   checkpoint/resume, VNS ladder, time budget, trace/metrics, fetch-failure
-  skip — wrapping *any* composition.
+  skip, chunk sanitizer + invariant guard — wrapping *any* composition.
+* :mod:`repro.engine.faults` — the **fault-tolerance vocabulary**:
+  transient/permanent taxonomy, retry policy with deterministic backoff,
+  fetch watchdog, and the seedable :class:`FaultPlan` injection harness.
 * :mod:`repro.engine.incore` — the jitted in-core chunk-loop cores (the
   historical drivers' scan bodies, bit-identical) + host-orchestrated
   sharded windows.
@@ -26,16 +29,28 @@ The legacy entry points (``repro.core.bigmeans.big_means*``,
 ``repro.cluster.runner.run``) and every ``repro.api`` strategy are thin
 assemblies of these pieces.
 """
+from repro.engine import faults as faults
 from repro.engine import incore as incore
 from repro.engine import middleware as middleware
 from repro.engine import scheduler as scheduler
 from repro.engine import stream as stream
 from repro.engine import sync as sync
 from repro.engine import topology as topology
+from repro.engine.faults import (
+    ChunkQuarantined,
+    FaultPlan,
+    FetchTimeout,
+    InvariantViolation,
+    PermanentFault,
+    RetryPolicy,
+    TransientFault,
+)
 from repro.engine.middleware import (
     Checkpoint,
+    ChunkSanitizer,
     EngineContext,
     FetchSkip,
+    InvariantGuard,
     Middleware,
     MiddlewareStack,
     TimeBudget,
@@ -58,18 +73,27 @@ from repro.engine.topology import SingleDevice, StreamMesh, WorkerMesh
 
 __all__ = [
     "Checkpoint",
+    "ChunkQuarantined",
+    "ChunkSanitizer",
     "CompetitiveS",
     "EndOfStream",
     "EngineContext",
+    "FaultPlan",
     "FetchSkip",
+    "FetchTimeout",
+    "InvariantGuard",
+    "InvariantViolation",
     "Middleware",
     "MiddlewareStack",
+    "PermanentFault",
+    "RetryPolicy",
     "RunnerMetrics",
     "SingleDevice",
     "StreamMesh",
     "SyncPolicy",
     "TimeBudget",
     "TraceLog",
+    "TransientFault",
     "Uniform",
     "VNSLadder",
     "WorkerMesh",
@@ -77,6 +101,7 @@ __all__ = [
     "collective",
     "competitive",
     "default_stack",
+    "faults",
     "get_scheduler",
     "incore",
     "list_schedulers",

@@ -1,0 +1,307 @@
+"""Fault taxonomy, retry policy, watchdog and injection harness.
+
+Long-lived streaming runs (hours of chunks from a flaky provider — the
+regimes of arXiv:2311.04517 / 2410.14548) must *degrade* under faults, not
+die or silently corrupt.  This module is the engine's one vocabulary for
+that:
+
+* **taxonomy** — :class:`TransientFault` / :class:`PermanentFault` and
+  :func:`classify`: transient errors (timeouts, I/O, lost nodes) are worth
+  retrying; permanent ones (malformed data, contract violations) never are.
+* **RetryPolicy** — bounded retries with exponential backoff; the jitter is
+  derived deterministically from ``(seed, chunk_id, attempt)`` so two runs
+  of the same config back off identically (no wall-clock randomness).
+* **watchdog** — :func:`call_with_timeout` turns a *hung* provider into a
+  raisable :class:`FetchTimeout` (a transient fault): the blocked call is
+  abandoned on a daemon thread and the fetch pipeline moves on, so
+  ``_Prefetcher.close()`` always reclaims its worker.
+* **FaultPlan** — a deterministic, seedable injection harness generalizing
+  the ``fault_injector`` hook: transient/permanent fetch errors, corrupted
+  chunks (NaN / Inf / wrong shape), provider stalls, plus helpers to
+  corrupt checkpoints and fail kernel dispatches.  The same plan replayed
+  against the same run injects the identical fault sequence — which is what
+  makes chaos runs regression-testable (``benchmarks/chaos.py``).
+
+Quarantine vs. failure: a chunk whose *fetch* raised is ``chunks_failed``
+(``("fetch_error", cid, err)``); a chunk that arrived but carries bad data
+is ``chunks_quarantined`` (``("quarantine", cid, reason)``, raised by the
+sanitizer middleware as :class:`ChunkQuarantined`).  Both reconcile into
+``done + failed + dropped + quarantined == fetched``.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+TRANSIENT = "transient"
+PERMANENT = "permanent"
+
+
+class TransientFault(Exception):
+    """An error worth retrying: the next attempt may succeed (lost node,
+    throttled provider, timeout)."""
+
+
+class PermanentFault(Exception):
+    """An error retries cannot fix (malformed request, contract violation):
+    fail the chunk immediately, never burn retry budget on it."""
+
+
+class FetchTimeout(TransientFault):
+    """A provider call exceeded the watchdog timeout (hung fetch)."""
+
+
+class ChunkQuarantined(Exception):
+    """Raised by the chunk sanitizer: the chunk arrived but its *data* is
+    unusable (non-finite values, wrong shape).  Carries the reason string
+    recorded in the ``("quarantine", cid, reason)`` trace event."""
+
+    def __init__(self, reason: str):
+        super().__init__(reason)
+        self.reason = reason
+
+
+class InvariantViolation(RuntimeError):
+    """A post-accept invariant broke (non-finite or increasing ``f_best``):
+    the run is corrupt and must fail loudly, not stream on."""
+
+
+# Exception types that retrying can never fix: data/contract errors.  An
+# unrecognized exception defaults to transient — the retry budget is
+# bounded, so optimism costs at most ``retries`` extra attempts, while
+# misclassifying a recoverable blip as permanent loses the chunk forever.
+_PERMANENT_TYPES = (
+    PermanentFault,
+    ValueError,
+    TypeError,
+    KeyError,
+    IndexError,
+    AttributeError,
+    AssertionError,
+    NotImplementedError,
+    ZeroDivisionError,
+)
+
+
+def classify(exc: BaseException) -> str:
+    """``TRANSIENT`` or ``PERMANENT`` for a provider exception."""
+    if isinstance(exc, TransientFault):
+        return TRANSIENT
+    if isinstance(exc, _PERMANENT_TYPES):
+        return PERMANENT
+    return TRANSIENT
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retries + exponential backoff with deterministic jitter.
+
+    ``retries`` is the number of *re*-attempts after the first failure
+    (0 = today's drop-the-chunk behaviour).  The jitter factor for
+    ``(chunk_id, attempt)`` comes from a PRNG seeded with
+    ``(seed, chunk_id, attempt)`` — no global randomness, so a replayed
+    run backs off identically.
+    """
+
+    retries: int = 0
+    backoff_s: float = 0.05
+    backoff_max_s: float = 2.0
+    seed: int = 0
+
+    def delay(self, chunk_id: int, attempt: int) -> float:
+        """Seconds to wait before re-attempt ``attempt`` (0-based)."""
+        base = min(self.backoff_s * (2.0 ** attempt), self.backoff_max_s)
+        rng = np.random.default_rng((self.seed, 0x5E77, chunk_id, attempt))
+        return base * (0.5 + 0.5 * float(rng.random()))
+
+    @classmethod
+    def from_config(cls, cfg) -> "RetryPolicy":
+        return cls(
+            retries=getattr(cfg, "retries", 0),
+            backoff_s=getattr(cfg, "retry_backoff_s", 0.05),
+            seed=getattr(cfg, "seed", 0),
+        )
+
+
+def call_with_timeout(fn, timeout: float | None, *, name: str = "watchdog"):
+    """Run ``fn()`` with a wall-clock bound.
+
+    ``timeout=None`` calls inline.  Otherwise ``fn`` runs on a daemon
+    thread; if it has not finished after ``timeout`` seconds a
+    :class:`FetchTimeout` is raised and the hung call is *abandoned* (its
+    daemon thread cannot block interpreter exit).  The caller's thread —
+    the prefetch worker — is therefore always reclaimable, whatever the
+    provider does.
+    """
+    if timeout is None:
+        return fn()
+    box: dict = {}
+    done = threading.Event()
+
+    def target():
+        try:
+            box["value"] = fn()
+        except BaseException as exc:  # noqa: BLE001 — relayed to caller
+            box["error"] = exc
+        finally:
+            done.set()
+
+    thread = threading.Thread(target=target, daemon=True, name=name)
+    thread.start()
+    if not done.wait(timeout):
+        raise FetchTimeout(
+            f"provider call exceeded the {timeout:.3g}s watchdog timeout")
+    if "error" in box:
+        raise box["error"]
+    return box["value"]
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault injection
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, replayable schedule of injected faults.
+
+    * ``transient_rate`` — fraction of chunk ids whose fetch raises a
+      :class:`TransientFault` for the first ``transient_attempts`` attempts
+      (then succeeds — so a retrying run recovers the chunk, a
+      ``retries=0`` run drops it).  Which ids fault is a pure function of
+      ``(seed, chunk_id)``.
+    * ``permanent_ids`` — fetches that always raise :class:`PermanentFault`.
+    * ``nan_ids`` / ``inf_ids`` / ``shape_ids`` — chunks delivered with
+      NaN-poisoned / Inf-poisoned / wrong-shape data (sanitizer fodder).
+    * ``stall_ids`` — fetches that sleep ``stall_s`` before returning
+      (hung-provider simulation; pair with a ``fetch_timeout_s`` watchdog).
+    """
+
+    seed: int = 0
+    transient_rate: float = 0.0
+    transient_attempts: int = 1
+    permanent_ids: tuple = ()
+    nan_ids: tuple = ()
+    inf_ids: tuple = ()
+    shape_ids: tuple = ()
+    stall_ids: tuple = ()
+    stall_s: float = 30.0
+
+    def is_transient(self, chunk_id: int) -> bool:
+        if self.transient_rate <= 0.0:
+            return False
+        rng = np.random.default_rng((self.seed, 0xFA17, chunk_id))
+        return bool(rng.random() < self.transient_rate)
+
+    def transient_ids(self, n_chunks: int) -> list[int]:
+        """The chunk ids in ``range(n_chunks)`` this plan faults."""
+        return [cid for cid in range(n_chunks) if self.is_transient(cid)]
+
+    def wrap(self, provider):
+        """A provider with this plan's faults injected around ``provider``.
+
+        Attempt counts are tracked per chunk id (exposed as
+        ``wrapped.attempts``, a Counter) so transient faults clear after
+        ``transient_attempts`` failures and tests can reconcile fetch
+        accounting against actual provider traffic.
+        """
+        attempts: collections.Counter = collections.Counter()
+        lock = threading.Lock()
+
+        def fetch(chunk_id: int):
+            with lock:
+                attempts[chunk_id] += 1
+                attempt = attempts[chunk_id]
+            if chunk_id in self.stall_ids:
+                time.sleep(self.stall_s)
+            if chunk_id in self.permanent_ids:
+                raise PermanentFault(
+                    f"injected permanent fault on chunk {chunk_id}")
+            if self.is_transient(chunk_id) \
+                    and attempt <= self.transient_attempts:
+                raise TransientFault(
+                    f"injected transient fault on chunk {chunk_id} "
+                    f"(attempt {attempt})")
+            chunk = np.array(provider(chunk_id))  # copy: never poison source
+            if chunk_id in self.nan_ids:
+                chunk[::7] = np.nan
+            if chunk_id in self.inf_ids:
+                chunk[::11] = np.inf
+            if chunk_id in self.shape_ids:
+                chunk = chunk[:, : max(1, chunk.shape[1] // 2)]
+            return chunk
+
+        fetch.attempts = attempts
+        return fetch
+
+    def injector(self):
+        """This plan's fetch-error faults as a legacy ``fault_injector``
+        hook (``injector(cid)`` raises; data corruption and stalls need
+        :meth:`wrap`, which owns the returned chunk)."""
+        wrapped = self.wrap(lambda cid: np.zeros((1, 1), dtype=np.float32))
+
+        def inject(chunk_id: int) -> None:
+            wrapped(chunk_id)
+
+        inject.attempts = wrapped.attempts
+        return inject
+
+
+def corrupt_checkpoint(directory: str, *, step: int | None = None,
+                       keep_bytes: int = 64) -> str:
+    """Truncate a checkpoint's ``arrays.npz`` to ``keep_bytes`` (a crashed /
+    torn write), defaulting to the newest step.  Returns the mangled path —
+    restore must now fall back to the previous intact step."""
+    import os
+
+    from repro.cluster import checkpoint as ckpt_lib
+
+    if step is None:
+        step = ckpt_lib.latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:012d}", "arrays.npz")
+    with open(path, "rb") as f:
+        head = f.read(keep_bytes)
+    with open(path, "wb") as f:
+        f.write(head)
+    return path
+
+
+@contextlib.contextmanager
+def kernel_failure(op: str = "fused", exc: Exception | None = None):
+    """Monkeypatch one Pallas kernel entry point to raise for the duration.
+
+    ``op`` is one of ``assign`` / ``update`` / ``fused`` / ``fused_batched``.
+    Used to exercise :mod:`repro.kernels.ops`'s graceful degradation: inside
+    this context a Pallas dispatch fails, the op demotes that shape to the
+    ref path once per process, and the run continues.
+    """
+    from repro.kernels import fused_step as fused_mod
+    from repro.kernels import ops
+
+    targets = {
+        "assign": (ops, "assign_pallas"),
+        "update": (ops, "update_pallas"),
+        "fused": (fused_mod, "fused_step_pallas"),
+        "fused_batched": (fused_mod, "fused_step_batched_pallas"),
+    }
+    if op not in targets:
+        raise KeyError(f"unknown kernel op {op!r}; known: {sorted(targets)}")
+    mod, name = targets[op]
+    original = getattr(mod, name)
+    failure = exc or RuntimeError(f"injected {op} kernel failure")
+
+    def boom(*args, **kwargs):
+        raise failure
+
+    setattr(mod, name, boom)
+    try:
+        yield
+    finally:
+        setattr(mod, name, original)

@@ -20,9 +20,11 @@ import time
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.cluster import checkpoint as ckpt_lib
+from repro.engine import faults
 
 
 @dataclasses.dataclass
@@ -181,6 +183,64 @@ class FetchSkip(Middleware):
         ctx.metrics.trace.append(("fetch_error", cid, err))
 
 
+class ChunkSanitizer(Middleware):
+    """Validate a chunk before it can reach acceptance.
+
+    A NaN/Inf-poisoned or wrong-shape chunk must never be compared against
+    ``f_best`` (NaN comparisons silently reject, ``-inf`` silently *wins*,
+    a shape mismatch crashes the jitted step): raise
+    :class:`repro.engine.faults.ChunkQuarantined` and let the loop account
+    for it as ``("quarantine", cid, reason)`` + ``chunks_quarantined``.
+    Quarantine is statistically free — chunks are i.i.d. samples — but
+    never silent.
+    """
+
+    def transform_chunk(self, ctx, cid, chunk):
+        n = int(ctx.state.centroids.shape[-1])
+        if chunk.ndim != 2 or int(chunk.shape[1]) != n:
+            raise faults.ChunkQuarantined(
+                f"bad shape {tuple(map(int, chunk.shape))}, want (*, {n})")
+        if int(chunk.shape[0]) < int(ctx.cfg.k):
+            raise faults.ChunkQuarantined(
+                f"chunk has {int(chunk.shape[0])} rows < k={ctx.cfg.k}")
+        if not bool(jnp.all(jnp.isfinite(chunk))):
+            raise faults.ChunkQuarantined("non-finite values (NaN/Inf)")
+        return chunk
+
+
+class InvariantGuard(Middleware):
+    """Post-accept invariants: ``f_best`` stays finite and, in fold mode,
+    monotone non-increasing *per point*.
+
+    Acceptance only ever lowers ``f_best``; the sole legitimate raw change
+    upward is the chunk-size rescale (objectives are sums over ``s``
+    points), which preserves ``f_best / s``.  So the per-point incumbent
+    must never rise — if it does (or goes NaN / ``-inf``), the run is
+    corrupt and must stop loudly rather than stream on.  Persistent-stream
+    mode tracks only finiteness: per-stream sizes make raw objectives
+    incomparable across windows there.
+    """
+
+    def __init__(self, rtol: float = 1e-4):
+        self.rtol = rtol
+        self._best_per_point = float("inf")
+
+    def after_window(self, ctx):
+        f = float(np.min(np.asarray(ctx.state.f_best)))
+        if np.isnan(f) or f == -np.inf:
+            raise faults.InvariantViolation(
+                f"f_best became {f!r}: acceptance was poisoned by bad data")
+        if not np.isfinite(f) or ctx.extras.get("stream_mode") != "fold":
+            return
+        per_point = f / max(int(ctx.last_s), 1)
+        if per_point > self._best_per_point * (1.0 + self.rtol):
+            raise faults.InvariantViolation(
+                f"f_best per point rose: {per_point:.6e} after "
+                f"{self._best_per_point:.6e} (monotone non-increasing "
+                "acceptance violated)")
+        self._best_per_point = min(self._best_per_point, per_point)
+
+
 class Checkpoint(Middleware):
     """Persist the *full* loop state: ``((state, key), vns_aux)`` where
     ``vns_aux = [rung, stall, last_s]``.
@@ -211,22 +271,36 @@ class Checkpoint(Middleware):
         return ((ctx.state, ctx.key), aux)
 
     def maybe_restore(self, ctx, example_state):
-        """Restore the latest checkpoint into ``ctx`` (state, key, step and
-        VNS loop state); no-op when the directory holds none."""
-        if ckpt_lib.latest_step(self.directory) is None:
+        """Restore the newest *intact* checkpoint into ``ctx`` (state, key,
+        step and VNS loop state); no-op when the directory holds none.
+
+        Self-healing: a corrupt newest ``step_*`` (truncated write, bad
+        digest) falls back to the newest intact one, recorded as a
+        ``("ckpt_fallback", step)`` trace event; when every stored
+        checkpoint is corrupt the run restarts fresh with
+        ``("ckpt_fallback", None)`` instead of crashing.
+        """
+        latest = ckpt_lib.latest_step(self.directory)
+        if latest is None:
             return False
+        step = ckpt_lib.latest_intact_step(self.directory)
+        if step is None:
+            ctx.metrics.trace.append(("ckpt_fallback", None))
+            return False
+        if step != latest:
+            ctx.metrics.trace.append(("ckpt_fallback", step))
         example_new = ((example_state, ctx.key),
                        np.zeros(3, dtype=np.int64))
-        n = ckpt_lib.n_leaves(self.directory)
+        n = ckpt_lib.n_leaves(self.directory, step)
         if n == len(jax.tree.flatten(example_new)[0]):
             ((state, key), aux), step = ckpt_lib.restore(
-                self.directory, example_new)
+                self.directory, example_new, step=step)
             aux = np.asarray(aux)
             ctx.rung, ctx.stall = int(aux[0]), int(aux[1])
             ctx.last_s = int(aux[2])
         else:                       # legacy (state, key) checkpoint
             (state, key), step = ckpt_lib.restore(
-                self.directory, (example_state, ctx.key))
+                self.directory, (example_state, ctx.key), step=step)
         ctx.state, ctx.key = state, key
         ctx.step = ctx.start_step = step
         return True
@@ -260,12 +334,17 @@ def load_loop_state(directory: str):
 def default_stack(cfg, *, for_streaming: bool = True) -> MiddlewareStack:
     """The streaming runner's historical capability set, as a stack.
 
-    Order matters: VNS (policy) first, then observers (trace, checkpoint),
-    then the stop condition.
+    Order matters: the sanitizer (chunk admission) before VNS (policy),
+    then observers (trace, checkpoint), the stop condition, and the
+    invariant guard last.  ``cfg.validate_chunks=False`` drops the
+    sanitizer and guard (bit-for-bit legacy admission).
     """
     mws: list[Middleware] = []
     if for_streaming:
         mws.append(FetchSkip())
+    validate = getattr(cfg, "validate_chunks", True)
+    if for_streaming and validate:
+        mws.append(ChunkSanitizer())
     if cfg.vns_ladder:
         mws.append(VNSLadder(cfg.s, cfg.vns_ladder, cfg.vns_patience))
     if cfg.log_every and for_streaming:
@@ -274,4 +353,6 @@ def default_stack(cfg, *, for_streaming: bool = True) -> MiddlewareStack:
         mws.append(Checkpoint(cfg.ckpt_dir, cfg.ckpt_every, cfg.batch))
     if cfg.time_budget_s is not None:
         mws.append(TimeBudget(cfg.time_budget_s))
+    if for_streaming and validate:
+        mws.append(InvariantGuard())
     return MiddlewareStack(mws)

@@ -13,7 +13,13 @@ Design properties (DESIGN.md §6) are unchanged from the historical runner:
 
 * **fault tolerance** — global state is (C, degenerate, f_best, step, key):
   kilobytes.  A lost/failed chunk is simply skipped: chunks are i.i.d.
-  uniform samples, so dropping one changes nothing statistically.
+  uniform samples, so dropping one changes nothing statistically.  On top
+  of that baseline, :mod:`repro.engine.faults` adds bounded retries with
+  deterministic backoff (``cfg.retries``), a fetch watchdog that turns a
+  hung provider into a retryable fault (``cfg.fetch_timeout_s``), and a
+  chunk sanitizer + post-accept invariant guard (``cfg.validate_chunks``)
+  that quarantine NaN/Inf/wrong-shape chunks before they can poison
+  ``f_best`` acceptance.
 * **replay invariance** — per-chunk keys are ``fold_in(key, chunk_id)``:
   restarts, batch sizes, prefetch depths and device counts replay the
   identical sample stream.
@@ -43,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bigmeans
+from repro.engine import faults
 from repro.engine import middleware as mw
 from repro.engine import scheduler as sched_lib
 from repro.engine import sync as sync_lib
@@ -58,15 +65,20 @@ class EndOfStream(Exception):
 
 @dataclasses.dataclass
 class RunnerMetrics:
-    """``trace`` holds ``(chunk_id, f_best, f_new)`` progress entries,
-    ``("fetch_error", chunk_id, "ExcType: message")`` entries for failed
-    fetches, and ``("budget_drop", (chunk_ids...))`` for chunks fetched but
-    dropped un-stepped at a budget stop — so ``chunks_done +
-    chunks_failed + chunks_dropped`` always reconciles with the number of
-    chunks fetched."""
+    """``trace`` holds ``(chunk_id, f_best, f_new)`` progress entries plus
+    the structured events: ``("fetch_error", chunk_id, "ExcType: message")``
+    for failed fetches (retries exhausted), ``("quarantine", chunk_id,
+    reason)`` for chunks that arrived with unusable data (NaN/Inf, wrong
+    shape), ``("budget_drop", (chunk_ids...))`` for chunks fetched but
+    dropped un-stepped at a budget stop, ``("short_chunk", cid, rows,
+    need)`` for ragged tails, and ``("ckpt_fallback", step)`` when restore
+    healed past a corrupt checkpoint — so ``chunks_done + chunks_failed +
+    chunks_dropped + chunks_quarantined`` always reconciles with the number
+    of chunks fetched."""
     chunks_done: int = 0
     chunks_failed: int = 0
     chunks_dropped: int = 0
+    chunks_quarantined: int = 0
     accepted: int = 0
     lloyd_iters: int = 0
     wall_time_s: float = 0.0
@@ -75,12 +87,53 @@ class RunnerMetrics:
 
 
 class _FetchFailure:
-    """A failed chunk fetch: carries the provider's exception type+message."""
+    """A failed chunk fetch: carries the provider's exception type+message,
+    its fault class and how many attempts were burned on it."""
 
-    __slots__ = ("error",)
+    __slots__ = ("error", "kind", "attempts")
 
-    def __init__(self, exc: BaseException):
+    def __init__(self, exc: BaseException, kind: str = faults.TRANSIENT,
+                 attempts: int = 1):
         self.error = f"{type(exc).__name__}: {exc}"
+        self.kind = kind
+        self.attempts = attempts
+
+
+def _fetch_resilient(provider, cid, fault_injector, dtype, *,
+                     retry=None, timeout=None, wait=time.sleep,
+                     aborted=None):
+    """One guarded chunk fetch: watchdog + classify + bounded retry.
+
+    Returns the device-staged chunk, raises :class:`EndOfStream`, or
+    returns a :class:`_FetchFailure` once the fault is terminal (permanent
+    class, or a transient one with the retry budget exhausted).  A hung
+    provider becomes a retryable :class:`repro.engine.faults.FetchTimeout`
+    via the watchdog, so the calling thread is never blocked for longer
+    than ``timeout`` per attempt.
+    """
+
+    def attempt_once():
+        if fault_injector is not None:
+            fault_injector(cid)
+        return np.asarray(provider(cid), dtype=dtype)
+
+    attempt = 0
+    while True:
+        try:
+            arr = faults.call_with_timeout(
+                attempt_once, timeout, name=f"fetch-watchdog-{cid}")
+            return jax.device_put(arr)
+        except EndOfStream:
+            raise
+        except Exception as exc:
+            kind = faults.classify(exc)
+            retries = retry.retries if retry is not None else 0
+            if (kind == faults.TRANSIENT and attempt < retries
+                    and not (aborted is not None and aborted())):
+                wait(retry.delay(cid, attempt))
+                attempt += 1
+                continue
+            return _FetchFailure(exc, kind=kind, attempts=attempt + 1)
 
 
 class _Prefetcher:
@@ -88,18 +141,26 @@ class _Prefetcher:
     run off the main thread, double-buffered through a bounded queue.
 
     Yields ``(chunk_id, chunk-or-_FetchFailure)`` in id order; a
-    ``_FetchFailure`` marks a failed fetch (the provider raised) so the
-    consumer can account for it and record the cause.
+    ``_FetchFailure`` marks a failed fetch (the provider raised, or kept
+    raising transiently past the retry budget) so the consumer can account
+    for it and record the cause.  With ``timeout`` set, each provider call
+    runs under the :func:`repro.engine.faults.call_with_timeout` watchdog:
+    a hung provider is abandoned on a daemon thread and surfaces as a
+    retryable fault, so the worker — and therefore :meth:`close` — stays
+    deterministic.
     """
 
     _DONE = object()
 
     def __init__(self, provider, ids, depth,
-                 fault_injector=None, dtype=np.float32):
+                 fault_injector=None, dtype=np.float32,
+                 retry=None, timeout=None):
         self._provider = provider
         self._ids = ids
         self._dtype = dtype
         self._fault_injector = fault_injector
+        self._retry = retry
+        self._timeout = timeout
         self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._work, daemon=True)
@@ -107,14 +168,12 @@ class _Prefetcher:
 
     def _fetch(self, cid):
         try:
-            if self._fault_injector is not None:
-                self._fault_injector(cid)
-            arr = np.asarray(self._provider(cid), dtype=self._dtype)
-            return jax.device_put(arr)
+            return _fetch_resilient(
+                self._provider, cid, self._fault_injector, self._dtype,
+                retry=self._retry, timeout=self._timeout,
+                wait=self._stop.wait, aborted=self._stop.is_set)
         except EndOfStream:
             return self._DONE
-        except Exception as exc:
-            return _FetchFailure(exc)
 
     def _put(self, item) -> bool:
         while not self._stop.is_set():
@@ -154,18 +213,17 @@ class _Prefetcher:
         self._thread.join(timeout=5.0)
 
 
-def _sync_chunks(provider, ids, fault_injector, dtype=np.float32):
-    """prefetch=0 fallback: fetch in the main thread (debug / determinism)."""
+def _sync_chunks(provider, ids, fault_injector, dtype=np.float32,
+                 retry=None, timeout=None):
+    """prefetch=0 fallback: fetch in the main thread (debug / determinism),
+    with the same retry/watchdog semantics as the prefetch pipeline."""
     for cid in ids:
         try:
-            if fault_injector is not None:
-                fault_injector(cid)
-            arr = np.asarray(provider(cid), dtype=dtype)
-            yield cid, jax.device_put(arr)
+            yield cid, _fetch_resilient(
+                provider, cid, fault_injector, dtype,
+                retry=retry, timeout=timeout)
         except EndOfStream:
             return
-        except Exception as exc:
-            yield cid, _FetchFailure(exc)
 
 
 def _mesh_put(topology, tree):
@@ -287,12 +345,17 @@ def run_stream(
 
     host_dtype = px.host_dtype(getattr(cfg, "precision", "auto")) or np.float32
     ids = range(start_chunk, cfg.n_chunks)
+    retry = faults.RetryPolicy.from_config(cfg)
+    timeout = getattr(cfg, "fetch_timeout_s", None)
     source = (
-        _Prefetcher(provider, ids, cfg.prefetch, fault_injector, host_dtype)
+        _Prefetcher(provider, ids, cfg.prefetch, fault_injector, host_dtype,
+                    retry=retry, timeout=timeout)
         if cfg.prefetch > 0
-        else _sync_chunks(provider, ids, fault_injector, host_dtype)
+        else _sync_chunks(provider, ids, fault_injector, host_dtype,
+                          retry=retry, timeout=timeout)
     )
     kernel = _StepKernel(cfg, key, topology)
+    ctx.extras["stream_mode"] = "persistent" if persistent else "fold"
     stack.on_start(ctx)
 
     runner_fn = _run_persistent if persistent else _run_fold
@@ -312,11 +375,22 @@ def run_stream(
 
 def _drop_pending(ctx, pending):
     """Budget-stop accounting for fetched-but-unstepped chunks (so
-    done + failed + dropped reconciles with fetched)."""
+    done + failed + dropped + quarantined reconciles with fetched)."""
     if pending:
         ctx.metrics.chunks_dropped += len(pending)
         ctx.metrics.trace.append(
             ("budget_drop", tuple(cid for cid, _ in pending)))
+
+
+def _sanitize(ctx, stack, chunk_id, chunk):
+    """Run the middleware transform chain; a quarantined chunk is counted
+    and traced, and ``None`` is returned so the loop skips it."""
+    try:
+        return stack.transform_chunk(ctx, chunk_id, chunk)
+    except faults.ChunkQuarantined as q:
+        ctx.metrics.chunks_quarantined += 1
+        ctx.metrics.trace.append(("quarantine", chunk_id, q.reason))
+        return None
 
 
 def _consume_info(ctx, info):
@@ -361,7 +435,9 @@ def _run_fold(source, state, ctx, stack, kernel, scheduler, sync):
             else:
                 metrics.chunks_failed += 1
             continue
-        chunk = stack.transform_chunk(ctx, chunk_id, chunk)
+        chunk = _sanitize(ctx, stack, chunk_id, chunk)
+        if chunk is None:
+            continue
         if pending and chunk.shape != pending[0][1].shape:
             # ragged chunk (short tail / VNS rung change mid-batch):
             # flush the homogeneous batch first, then start a new one
@@ -526,6 +602,9 @@ def _run_persistent(source, state, ctx, stack, kernel, scheduler, sync):
                 stack.on_fetch_error(ctx, chunk_id, chunk.error)
             else:
                 metrics.chunks_failed += 1
+            continue
+        chunk = _sanitize(ctx, stack, chunk_id, chunk)
+        if chunk is None:               # quarantined: never the eval set
             continue
         eval_chunk = chunk              # raw (unsliced): the common eval set
         pending.append((chunk_id, chunk))

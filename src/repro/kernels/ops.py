@@ -22,10 +22,17 @@ precision without touching acceptance semantics.
 Pallas launches consult :mod:`repro.kernels.autotune` for their tile sizes
 (keyed by backend, batch, shape and precision) instead of hardcoded module
 constants; with tuning disabled this returns the historical defaults.
+
+Graceful degradation: a Pallas dispatch that raises demotes that
+``(op, impl, shape, precision)`` to the ref path once per process (recorded
+in :func:`kernel_demotions`, surfaced as a ``RuntimeWarning`` and as
+``("kernel_fallback", ...)`` trace events by ``repro.api.fit``) — a kernel
+bug degrades a long run instead of killing it.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +46,43 @@ IMPLS = ("pallas", "pallas_interpret", "ref", "ref_chunked")
 PRECISIONS = px.PRECISIONS
 
 _DEFAULT_IMPL: str | None = None    # explicit override; None = auto-detect
+
+# Graceful degradation: a Pallas dispatch that raises (lowering bug, tiling
+# miss, backend quirk) demotes that (op, impl, shape, precision) to the ref
+# path for the rest of the process — the run degrades instead of dying, and
+# it happens ONCE per key, not once per chunk.  `kernel_demotions()` is the
+# run-health surface (`repro.api.fit` turns new entries into
+# ("kernel_fallback", ...) trace events).
+_DEMOTIONS: dict[tuple, dict] = {}
+
+
+def kernel_demotions() -> list[dict]:
+    """Every Pallas→ref demotion this process has taken, in order."""
+    return list(_DEMOTIONS.values())
+
+
+def reset_kernel_demotions() -> None:
+    """Forget recorded demotions (tests; a fixed backend mid-process)."""
+    _DEMOTIONS.clear()
+
+
+def _demoted(key: tuple) -> bool:
+    return key in _DEMOTIONS
+
+
+def _demote(key: tuple, exc: Exception) -> None:
+    op = key[0]
+    _DEMOTIONS[key] = {
+        "op": op,
+        "impl": key[1],
+        "shape": key[2],
+        "precision": key[3],
+        "error": f"{type(exc).__name__}: {exc}",
+    }
+    warnings.warn(
+        f"pallas {op} dispatch failed for shape {key[2]} "
+        f"({key[1]}, {key[3]}); demoting to the ref path for this process: "
+        f"{exc}", RuntimeWarning, stacklevel=3)
 
 
 def default_impl() -> str:
@@ -102,15 +146,23 @@ def assign(
     impl = resolve_impl(impl)
     precision = px.resolve(precision, x.dtype)
     if impl in ("pallas", "pallas_interpret"):
-        interp = impl == "pallas_interpret"
-        blocks = autotune.get_blocks(
-            "assign",
-            _bench(x, lambda blk: lambda: jax.block_until_ready(assign_pallas(
-                x, c, precision=precision, interpret=interp, **blk))),
-            backend=_tune_backend(impl), b=1, m=x.shape[0], k=c.shape[0],
-            n=x.shape[1], precision=precision)
-        return assign_pallas(x, c, precision=precision, interpret=interp,
-                             **blocks)
+        dkey = ("assign", impl, (1, x.shape[0], c.shape[0], x.shape[1]),
+                precision)
+        if not _demoted(dkey):
+            try:
+                interp = impl == "pallas_interpret"
+                blocks = autotune.get_blocks(
+                    "assign",
+                    _bench(x, lambda blk: lambda: jax.block_until_ready(
+                        assign_pallas(x, c, precision=precision,
+                                      interpret=interp, **blk))),
+                    backend=_tune_backend(impl), b=1, m=x.shape[0],
+                    k=c.shape[0], n=x.shape[1], precision=precision)
+                return assign_pallas(x, c, precision=precision,
+                                     interpret=interp, **blocks)
+            except Exception as exc:
+                _demote(dkey, exc)
+        impl = "ref"                    # demoted shape: ref path below
     if impl == "ref":
         return ref.assign_ref(x, c, precision=precision)
     if impl == "ref_chunked":
@@ -147,10 +199,15 @@ def update(
     if weights is not None:
         # Weighted path stays on the jnp oracle (cold path: coresets, K-means||).
         return ref.update_ref(x, ids, k, weights, precision=precision)
-    if impl == "pallas":
-        return update_pallas(x, ids, k, precision=precision)
-    if impl == "pallas_interpret":
-        return update_pallas(x, ids, k, precision=precision, interpret=True)
+    if impl in ("pallas", "pallas_interpret"):
+        dkey = ("update", impl, (1, x.shape[0], k, x.shape[1]), precision)
+        if not _demoted(dkey):
+            try:
+                return update_pallas(x, ids, k, precision=precision,
+                                     interpret=impl == "pallas_interpret")
+            except Exception as exc:
+                _demote(dkey, exc)
+        impl = "ref"                    # demoted shape: ref path below
     if impl in ("ref", "ref_chunked"):
         return ref.update_ref(x, ids, k, precision=precision)
     raise ValueError(f"unknown impl {impl!r}")
@@ -189,16 +246,23 @@ def fused_step(
     k, n = c.shape[0], c.shape[1]
     if weights is None and fused.fits(k, n):
         if impl in ("pallas", "pallas_interpret"):
-            interp = impl == "pallas_interpret"
-            blocks = autotune.get_blocks(
-                "fused",
-                _bench(x, lambda blk: lambda: jax.block_until_ready(
-                    fused.fused_step_pallas(
-                        x, c, precision=precision, interpret=interp, **blk))),
-                backend=_tune_backend(impl), b=1, m=x.shape[0], k=k, n=n,
-                precision=precision)
-            return fused.fused_step_pallas(
-                x, c, precision=precision, interpret=interp, **blocks)
+            dkey = ("fused", impl, (1, x.shape[0], k, n), precision)
+            if not _demoted(dkey):
+                try:
+                    interp = impl == "pallas_interpret"
+                    blocks = autotune.get_blocks(
+                        "fused",
+                        _bench(x, lambda blk: lambda: jax.block_until_ready(
+                            fused.fused_step_pallas(
+                                x, c, precision=precision, interpret=interp,
+                                **blk))),
+                        backend=_tune_backend(impl), b=1, m=x.shape[0], k=k,
+                        n=n, precision=precision)
+                    return fused.fused_step_pallas(
+                        x, c, precision=precision, interpret=interp, **blocks)
+                except Exception as exc:
+                    _demote(dkey, exc)
+            # demoted shape: the two-pass ref fallback below
     # Two-pass fallback (non-fused impls, weighted steps, or an envelope
     # miss).  Explicit ref impls are honored as-is — in particular
     # 'ref_chunked' keeps its bounded [chunk, k] distance working set for
@@ -257,14 +321,21 @@ def fused_step_batched(
     k, n = c.shape[1], c.shape[2]
     if fused.fits_batched(k, n):
         if impl in ("pallas", "pallas_interpret"):
-            interp = impl == "pallas_interpret"
-            blocks = autotune.get_blocks(
-                "fused_batched",
-                _bench(x, lambda blk: lambda: jax.block_until_ready(
-                    fused.fused_step_batched_pallas(
-                        x, c, precision=precision, interpret=interp, **blk))),
-                backend=_tune_backend(impl), b=batch, m=m, k=k, n=n,
-                precision=precision)
-            return fused.fused_step_batched_pallas(
-                x, c, precision=precision, interpret=interp, **blocks)
+            dkey = ("fused_batched", impl, (batch, m, k, n), precision)
+            if not _demoted(dkey):
+                try:
+                    interp = impl == "pallas_interpret"
+                    blocks = autotune.get_blocks(
+                        "fused_batched",
+                        _bench(x, lambda blk: lambda: jax.block_until_ready(
+                            fused.fused_step_batched_pallas(
+                                x, c, precision=precision, interpret=interp,
+                                **blk))),
+                        backend=_tune_backend(impl), b=batch, m=m, k=k, n=n,
+                        precision=precision)
+                    return fused.fused_step_batched_pallas(
+                        x, c, precision=precision, interpret=interp, **blocks)
+                except Exception as exc:
+                    _demote(dkey, exc)
+                # demoted shape: the batched two-pass oracle below
     return _fused_step_batched_ref(x, c, precision=precision)

@@ -5,10 +5,6 @@ import importlib
 
 _ARCH_MODULES = {
     "llama3.2-1b": "llama3_2_1b",
-    "gemma2-2b": "gemma2_2b",
-    "minitron-4b": "minitron_4b",
-    "phi3-mini-3.8b": "phi3_mini_3_8b",
-    "paligemma-3b": "paligemma_3b",
     "hymba-1.5b": "hymba_1_5b",
     "seamless-m4t-medium": "seamless_m4t_medium",
     "deepseek-moe-16b": "deepseek_moe_16b",

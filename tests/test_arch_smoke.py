@@ -74,10 +74,6 @@ def test_full_config_constants(arch):
     cfg = get_config(arch)
     expected = {
         "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
-        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
-        "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
-        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
-        "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
         "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
         "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
         "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),

@@ -18,9 +18,6 @@ KEY = jax.random.PRNGKey(1)
 
 CASES = [
     ("llama3.2-1b", 1e-3),
-    ("gemma2-2b", 1e-3),
-    ("phi3-mini-3.8b", 1e-3),
-    ("paligemma-3b", 1e-3),
     ("seamless-m4t-medium", 1e-3),
     ("deepseek-moe-16b", 1e-3),
     ("hymba-1.5b", 0.15),

@@ -1,0 +1,485 @@
+"""Fault-tolerance suite: injection harness, retry/quarantine, watchdog,
+checkpoint self-healing, kernel degradation, and the seeded chaos e2e.
+
+The load-bearing contracts:
+
+* accounting reconciles exactly — ``done + failed + dropped + quarantined
+  == fetched`` — at every prefetch depth, fault or no fault;
+* ``retries=0`` (the default) reproduces the legacy drop-the-chunk
+  behaviour bit-for-bit;
+* a recovered transient fault leaves the trajectory bitwise identical to
+  the fault-free run (per-chunk keys come from ``fold_in(key, cid)``);
+* a hung provider never leaks the prefetch worker thread.
+"""
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.api import BigMeansConfig, fit
+from repro.cluster import checkpoint, runner
+from repro.data.synthetic import GMMSpec, gmm_chunk
+from repro.engine import faults, middleware, stream
+
+SPEC = GMMSpec(m=10**5, n=8, components=5, seed=3)
+
+
+def provider(cid):
+    return np.asarray(gmm_chunk(SPEC, cid, 512))
+
+
+def cfg_for(**kw):
+    base = dict(k=5, s=512, n_chunks=8, prefetch=0, seed=1)
+    base.update(kw)
+    return BigMeansConfig(**base)
+
+
+def reconcile(m, fetched):
+    assert (m.chunks_done + m.chunks_failed + m.chunks_dropped
+            + m.chunks_quarantined) == fetched, m
+
+
+# ---------------------------------------------------------------------------
+# harness determinism
+
+
+def test_fault_plan_is_deterministic():
+    plan = faults.FaultPlan(seed=11, transient_rate=0.3)
+    again = faults.FaultPlan(seed=11, transient_rate=0.3)
+    assert plan.transient_ids(64) == again.transient_ids(64)
+    assert plan.transient_ids(64)  # a 0.3 rate over 64 ids must hit some
+    other = faults.FaultPlan(seed=12, transient_rate=0.3)
+    assert plan.transient_ids(256) != other.transient_ids(256)
+
+
+def test_retry_policy_deterministic_bounded_backoff():
+    pol = faults.RetryPolicy(retries=3, backoff_s=0.05, backoff_max_s=0.4,
+                             seed=7)
+    delays = [pol.delay(5, a) for a in range(6)]
+    assert delays == [pol.delay(5, a) for a in range(6)]  # replay identical
+    assert all(0.0 < d <= 0.4 for d in delays)            # capped
+    assert pol.delay(5, 0) != pol.delay(6, 0)             # jitter per chunk
+
+
+def test_classify_taxonomy():
+    assert faults.classify(RuntimeError("node lost")) == faults.TRANSIENT
+    assert faults.classify(faults.FetchTimeout("hung")) == faults.TRANSIENT
+    assert faults.classify(OSError("io")) == faults.TRANSIENT
+    assert faults.classify(ValueError("bad")) == faults.PERMANENT
+    assert faults.classify(KeyError("k")) == faults.PERMANENT
+    assert faults.classify(NotImplementedError()) == faults.PERMANENT
+
+
+# ---------------------------------------------------------------------------
+# retry / quarantine semantics through the real streaming loop
+
+
+def test_retry_recovers_transients_bitwise():
+    plan = faults.FaultPlan(seed=5, transient_rate=0.4, transient_attempts=1)
+    hit = plan.transient_ids(8)
+    assert hit  # the plan must actually fault something
+    wrapped = plan.wrap(provider)
+    cfg = cfg_for(retries=2, retry_backoff_s=0.0)
+    st, m = runner.run(wrapped, cfg, n_features=8)
+    clean_st, clean_m = runner.run(provider, cfg_for(), n_features=8)
+
+    assert m.chunks_done == 8 and m.chunks_failed == 0
+    reconcile(m, 8)
+    # every faulted chunk burned exactly one extra provider attempt
+    assert sum(wrapped.attempts.values()) == 8 + len(hit)
+    # recovered run is indistinguishable from the fault-free run
+    np.testing.assert_array_equal(np.asarray(st.centroids),
+                                  np.asarray(clean_st.centroids))
+    assert float(st.f_best) == float(clean_st.f_best)
+
+
+def test_retries_zero_matches_legacy_drop_bitwise():
+    """The default config must reproduce today's behaviour exactly: a
+    failing fetch is dropped with ``chunks_failed`` + ``fetch_error``."""
+    bad = {2, 5}
+
+    def flaky(cid):
+        if cid in bad:
+            raise RuntimeError(f"node lost {cid}")
+        return provider(cid)
+
+    def legacy_injector(cid):
+        if cid in bad:
+            raise RuntimeError(f"node lost {cid}")
+
+    st, m = runner.run(flaky, cfg_for(), n_features=8)
+    st_legacy, m_legacy = runner.run(
+        provider, cfg_for(), n_features=8, fault_injector=legacy_injector)
+
+    assert m.chunks_failed == len(bad) == m_legacy.chunks_failed
+    assert sorted(t[1] for t in m.trace if t[0] == "fetch_error") == [2, 5]
+    np.testing.assert_array_equal(np.asarray(st.centroids),
+                                  np.asarray(st_legacy.centroids))
+    assert float(st.f_best) == float(st_legacy.f_best)
+
+
+def test_permanent_faults_are_never_retried():
+    plan = faults.FaultPlan(seed=0, permanent_ids=(3,))
+    wrapped = plan.wrap(provider)
+    cfg = cfg_for(retries=3, retry_backoff_s=0.0)
+    _, m = runner.run(wrapped, cfg, n_features=8)
+    assert wrapped.attempts[3] == 1          # no retry budget burned
+    assert m.chunks_failed == 1
+    errs = [t for t in m.trace if t[0] == "fetch_error" and t[1] == 3]
+    assert errs and "PermanentFault" in errs[0][2]
+    reconcile(m, 8)
+
+
+def test_corrupt_chunks_quarantined_with_accounting():
+    plan = faults.FaultPlan(seed=0, nan_ids=(1,), inf_ids=(4,),
+                            shape_ids=(6,))
+    st, m = runner.run(plan.wrap(provider), cfg_for(), n_features=8)
+
+    assert m.chunks_quarantined == 3 and m.chunks_failed == 0
+    reconcile(m, 8)
+    q = {t[1]: t[2] for t in m.trace if t[0] == "quarantine"}
+    assert set(q) == {1, 4, 6}
+    assert "non-finite" in q[1] and "non-finite" in q[4]
+    assert "shape" in q[6]
+    assert np.isfinite(float(st.f_best))
+
+    # Quarantining a chunk is equivalent to its fetch having failed: the
+    # surviving-chunk trajectory must be bitwise identical.
+    def failing(cid):
+        if cid in (1, 4, 6):
+            raise RuntimeError("boom")
+        return provider(cid)
+
+    st_drop, m_drop = runner.run(failing, cfg_for(), n_features=8)
+    assert m_drop.chunks_failed == 3
+    np.testing.assert_array_equal(np.asarray(st.centroids),
+                                  np.asarray(st_drop.centroids))
+    assert float(st.f_best) == float(st_drop.f_best)
+
+
+def test_quarantine_in_persistent_stream_mode():
+    plan = faults.FaultPlan(seed=0, nan_ids=(3,))
+    cfg = cfg_for(batch=2, sync_every=2)
+    st, m = runner.run(plan.wrap(provider), cfg, n_features=8)
+    assert m.chunks_quarantined == 1
+    assert ("quarantine", 3, "non-finite values (NaN/Inf)") in m.trace
+    reconcile(m, 8)
+    assert np.isfinite(float(np.min(np.asarray(st.f_best))))
+
+
+# ---------------------------------------------------------------------------
+# watchdog: hung providers (satellite 1)
+
+
+def test_watchdog_turns_hang_into_fault():
+    never = threading.Event()
+
+    def hung(cid):
+        if cid == 2:
+            never.wait(30.0)  # "never" returns within the test's horizon
+        return provider(cid)
+
+    cfg = cfg_for(fetch_timeout_s=0.25)
+    t0 = time.monotonic()
+    _, m = runner.run(hung, cfg, n_features=8)
+    assert time.monotonic() - t0 < 15.0      # did not wait out the hang
+    assert m.chunks_done == 7 and m.chunks_failed == 1
+    errs = [t for t in m.trace if t[0] == "fetch_error" and t[1] == 2]
+    assert errs and "FetchTimeout" in errs[0][2]
+    reconcile(m, 8)
+    never.set()
+
+
+def test_prefetcher_close_reclaims_worker_with_hung_provider():
+    """Regression: close() must not deadlock or leak the worker thread when
+    the provider never returns."""
+    never = threading.Event()
+
+    def hung(cid):
+        never.wait(30.0)
+        return provider(cid)
+
+    p = stream._Prefetcher(hung, range(100), depth=2, timeout=0.2)
+    it = iter(p)
+    cid, item = next(it)
+    assert cid == 0 and isinstance(item, stream._FetchFailure)
+    assert "FetchTimeout" in item.error
+    p.close()
+    assert not p._thread.is_alive()
+    never.set()
+
+
+def test_prefetcher_close_is_idempotent_and_fast_mid_stream():
+    p = stream._Prefetcher(provider, range(1000), depth=2)
+    next(iter(p))
+    t0 = time.monotonic()
+    p.close()
+    p.close()
+    assert time.monotonic() - t0 < 5.0
+    assert not p._thread.is_alive()
+
+
+def test_watchdog_timeout_is_retryable():
+    """A stall that clears on the second attempt is recovered by retries."""
+    calls = []
+
+    def stalls_once(cid):
+        calls.append(cid)
+        if cid == 1 and calls.count(1) == 1:
+            time.sleep(5.0)
+        return provider(cid)
+
+    cfg = cfg_for(n_chunks=3, fetch_timeout_s=0.3, retries=1,
+                  retry_backoff_s=0.0)
+    _, m = runner.run(stalls_once, cfg, n_features=8)
+    assert m.chunks_done == 3 and m.chunks_failed == 0
+    assert calls.count(1) == 2
+
+
+# ---------------------------------------------------------------------------
+# accounting under prefetch with bursty failures (satellite 3)
+
+
+@pytest.mark.parametrize("prefetch", [0, 2, 4])
+def test_bursty_failures_reconcile_at_every_depth(prefetch):
+    bad = {3, 4, 5}  # a consecutive burst mid-stream
+    fetched = []
+
+    def bursty(cid):
+        fetched.append(cid)
+        if cid in bad:
+            raise RuntimeError(f"burst {cid}")
+        return provider(cid)
+
+    cfg = cfg_for(n_chunks=10, prefetch=prefetch)
+    st, m = runner.run(bursty, cfg, n_features=8)
+    assert m.chunks_failed == 3 and m.chunks_done == 7
+    reconcile(m, len(fetched))
+    assert sorted(t[1] for t in m.trace if t[0] == "fetch_error") == [3, 4, 5]
+    # stash for the cross-depth comparison below
+    _BURST_RUNS[prefetch] = (np.asarray(st.centroids), float(st.f_best),
+                             [t for t in m.trace if t[0] == "accept"]
+                             or m.trace)
+
+
+_BURST_RUNS: dict = {}
+
+
+def test_bursty_failure_trajectories_match_across_depths():
+    """Replay invariance survives faults: per-chunk keys are fold_in(key,
+    cid), so the surviving-chunk trajectory is bitwise identical whether
+    fetches were synchronous or pipelined."""
+    assert set(_BURST_RUNS) == {0, 2, 4}, "parametrized test must run first"
+    c0, f0, _ = _BURST_RUNS[0]
+    for depth in (2, 4):
+        c, f, _ = _BURST_RUNS[depth]
+        np.testing.assert_array_equal(c0, c)
+        assert f0 == f
+
+
+# ---------------------------------------------------------------------------
+# checkpoint self-healing (satellite 2)
+
+
+def ckpt_tree():
+    return (np.arange(12, dtype=np.float32).reshape(3, 4),
+            np.float32(7.0))
+
+
+def test_checkpoint_save_writes_digests(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save(d, 5, ckpt_tree())
+    meta = json.loads(
+        (tmp_path / "step_000000000005" / "meta.json").read_text())
+    assert "arrays.npz" in meta["digests"]
+    assert checkpoint.verify_step(d, 5)
+    assert checkpoint.latest_intact_step(d) == 5
+
+
+def test_truncated_checkpoint_falls_back_to_previous(tmp_path):
+    d = str(tmp_path)
+    tree = ckpt_tree()
+    checkpoint.save(d, 5, (tree[0], np.float32(5.0)))
+    checkpoint.save(d, 9, (tree[0], np.float32(9.0)))
+    faults.corrupt_checkpoint(d)             # mangles newest (step 9)
+
+    assert checkpoint.latest_step(d) == 9    # still listed...
+    assert not checkpoint.verify_step(d, 9)  # ...but detected corrupt
+    assert checkpoint.latest_intact_step(d) == 5
+    restored = checkpoint.restore(d, tree)
+    assert float(restored[1]) == 5.0         # fell back, didn't crash
+
+
+def test_restore_all_corrupt_raises_not_garbage(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save(d, 3, ckpt_tree())
+    faults.corrupt_checkpoint(d, step=3)
+    with pytest.raises(FileNotFoundError, match="no intact checkpoint"):
+        checkpoint.restore(d, ckpt_tree())
+
+
+def test_save_cleans_stale_tmp_dirs(tmp_path):
+    stale = tmp_path / "tmp.000000000001"
+    stale.mkdir()
+    (stale / "arrays.npz").write_bytes(b"torn write")
+    checkpoint.save(str(tmp_path), 2, ckpt_tree())
+    assert not stale.exists()
+    assert checkpoint.steps(str(tmp_path)) == [2]
+
+
+def test_runner_resumes_from_intact_step_after_corruption(tmp_path):
+    """End-to-end self-healing: corrupt the newest checkpoint, resume, and
+    the run falls back to the previous step with a trace event."""
+    cfg = cfg_for(n_chunks=8, ckpt_dir=str(tmp_path), ckpt_every=3)
+    runner.run(provider, cfg, n_features=8)
+    assert len(checkpoint.steps(str(tmp_path))) >= 2
+    newest = checkpoint.latest_step(str(tmp_path))
+    faults.corrupt_checkpoint(str(tmp_path))
+
+    cfg2 = cfg.replace(n_chunks=10)
+    st, m = runner.run(provider, cfg2, n_features=8)
+    fallbacks = [t for t in m.trace if t[0] == "ckpt_fallback"]
+    assert fallbacks and fallbacks[0][1] < newest
+    assert np.isfinite(float(st.f_best))
+
+
+def test_runner_fresh_start_when_every_step_corrupt(tmp_path):
+    cfg = cfg_for(n_chunks=4, ckpt_dir=str(tmp_path), ckpt_every=2)
+    runner.run(provider, cfg, n_features=8)
+    for s in checkpoint.steps(str(tmp_path)):
+        faults.corrupt_checkpoint(str(tmp_path), step=s)
+    st, m = runner.run(provider, cfg, n_features=8)
+    assert ("ckpt_fallback", None) in m.trace    # restarted from scratch
+    assert m.chunks_done == 4                    # full rerun, not resumed
+    assert np.isfinite(float(st.f_best))
+
+
+# ---------------------------------------------------------------------------
+# graceful kernel degradation
+
+
+@pytest.fixture
+def clean_demotions():
+    from repro.kernels import ops
+    ops.reset_kernel_demotions()
+    yield ops
+    ops.reset_kernel_demotions()
+
+
+def test_kernel_failure_demotes_once_and_falls_back(clean_demotions):
+    ops = clean_demotions
+    x = np.asarray(gmm_chunk(SPEC, 0, 96), dtype=np.float32)
+    c = x[:5].copy()
+    want = ops.fused_step(jnp.asarray(x), jnp.asarray(c), impl="ref")
+    with faults.kernel_failure("fused"):
+        with pytest.warns(RuntimeWarning, match="fused"):
+            got = ops.fused_step(jnp.asarray(x), jnp.asarray(c),
+                                 impl="pallas_interpret")
+        # second call at the demoted shape: silent ref path, no new record
+        ops.fused_step(jnp.asarray(x), jnp.asarray(c),
+                       impl="pallas_interpret")
+    demos = ops.kernel_demotions()
+    assert len(demos) == 1
+    assert demos[0]["op"] == "fused" and "injected" in demos[0]["error"]
+    for w, g in zip(want, got):
+        np.testing.assert_allclose(np.asarray(w), np.asarray(g), rtol=1e-5)
+
+
+def test_kernel_fallback_surfaces_on_fit_result(clean_demotions):
+    X = np.asarray(gmm_chunk(SPEC, 0, 4096), dtype=np.float32)
+    cfg = BigMeansConfig(k=5, s=768, n_chunks=3, seed=1,
+                         impl="pallas_interpret", autotune=False)
+    with faults.kernel_failure("fused"), \
+            pytest.warns(RuntimeWarning, match="fused"):
+        result = fit(X, cfg, method="sequential")
+    kinds = {t[0] for t in result.trace}
+    assert "kernel_fallback" in kinds
+    assert result.health and result.health["kernel_fallbacks"]
+    assert np.isfinite(result.objective)
+
+
+# ---------------------------------------------------------------------------
+# invariant guard
+
+
+def _guard_ctx(f_best, last_s=512, mode="fold"):
+    class State:
+        pass
+
+    st = State()
+    st.f_best = np.asarray(f_best, dtype=np.float32)
+    ctx = middleware.EngineContext(cfg=None, key=None, metrics=None,
+                                   state=st, last_s=last_s)
+    ctx.extras["stream_mode"] = mode
+    return ctx
+
+
+def test_invariant_guard_rejects_nan_and_neg_inf():
+    guard = middleware.InvariantGuard()
+    with pytest.raises(faults.InvariantViolation, match="poisoned"):
+        guard.after_window(_guard_ctx(np.nan))
+    with pytest.raises(faults.InvariantViolation, match="poisoned"):
+        guard.after_window(_guard_ctx(-np.inf))
+
+
+def test_invariant_guard_rejects_rising_incumbent_in_fold_mode():
+    guard = middleware.InvariantGuard()
+    guard.after_window(_guard_ctx(100.0))
+    guard.after_window(_guard_ctx(90.0))          # improving: fine
+    with pytest.raises(faults.InvariantViolation, match="rose"):
+        guard.after_window(_guard_ctx(140.0))
+
+
+def test_invariant_guard_tolerates_rescale_and_persistent_mode():
+    guard = middleware.InvariantGuard()
+    guard.after_window(_guard_ctx(100.0, last_s=512))
+    guard.after_window(_guard_ctx(200.0, last_s=1024))  # same per point
+    # persistent mode: raw objectives incomparable, only finiteness checked
+    guard2 = middleware.InvariantGuard()
+    guard2.after_window(_guard_ctx(10.0, mode="persistent"))
+    guard2.after_window(_guard_ctx(50.0, mode="persistent"))
+
+
+# ---------------------------------------------------------------------------
+# chaos end-to-end
+
+
+def test_chaos_run_completes_and_reconciles(tmp_path):
+    """The whole stack under one seeded plan: transient faults (recovered),
+    a permanent failure, a poisoned chunk, a corrupted checkpoint — and the
+    run still completes with exact accounting and a sane objective."""
+    cfg = BigMeansConfig(k=5, s=512, n_chunks=16, prefetch=2, seed=1,
+                         retries=2, retry_backoff_s=0.0,
+                         fetch_timeout_s=5.0,
+                         ckpt_dir=str(tmp_path), ckpt_every=5)
+    clean = fit(provider, cfg.replace(ckpt_dir=None), method="streaming",
+                n_features=8)
+
+    # stage checkpoints, then corrupt the newest before the chaos run
+    runner.run(provider, cfg.replace(n_chunks=11), n_features=8)
+    faults.corrupt_checkpoint(str(tmp_path))
+
+    # faults sit past chunk 11 so they hit even after the checkpoint resume
+    plan = faults.FaultPlan(seed=13, transient_rate=0.25,
+                            transient_attempts=1,
+                            permanent_ids=(12,), nan_ids=(14,))
+    wrapped = plan.wrap(provider)
+    result = fit(wrapped, cfg, method="streaming", n_features=8)
+
+    h = result.health
+    assert h is not None
+    assert (h["chunks_done"] + h["chunks_failed"] + h["chunks_dropped"]
+            + h["chunks_quarantined"]) == h["chunks_fetched"]
+    assert h["chunks_failed"] == 1           # the permanent fault only
+    assert h["chunks_quarantined"] == 1      # the NaN chunk
+    assert h["ckpt_fallback"] is not None    # healed past the torn write
+    assert h["quarantine_reasons"] == [(14, "non-finite values (NaN/Inf)")]
+    assert np.isfinite(result.objective)
+    # dropping two i.i.d. chunks and resuming mid-stream must not move the
+    # objective materially (gate tolerance is 5%)
+    assert result.objective <= clean.objective * 1.05
