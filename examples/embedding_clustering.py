@@ -5,7 +5,7 @@ This is the integration point described in DESIGN.md §5: the paper's
 technique is data/representation-level, so it composes with every assigned
 architecture rather than modifying its forward pass.
 
-    PYTHONPATH=src python examples/embedding_clustering.py --arch llama3.2-1b
+    PYTHONPATH=src python examples/embedding_clustering.py --arch hymba-1.5b
 """
 import argparse
 
@@ -19,7 +19,7 @@ from repro.models.registry import get_config, model_fns
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--arch", default="hymba-1.5b")
     ap.add_argument("--codebook", type=int, default=64)
     args = ap.parse_args()
 

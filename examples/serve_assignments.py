@@ -1,55 +1,103 @@
-"""Serving-style demo: a (tiny) assignment service over trained centroids.
+"""Serving demo: train, register, serve concurrent clients, hot-swap.
 
-The paper notes the final point-to-centroid assignment is itself a streaming
-workload — clients submit batches of vectors, the service returns cluster ids
-from the incumbent centroids (optionally refreshed from a checkpoint).
+The paper's end product is a centroid set; its value is realized at
+assignment time, and point-to-centroid lookup is itself a streaming
+workload.  This example runs the whole lifecycle through the public API:
+
+1. **train** — a checkpointed streaming Big-means fit;
+2. **serve** — register the result with ``repro.api.serve()``: concurrent
+   client threads submit small point batches, the batching frontend
+   coalesces them into padded power-of-two launches (zero recompiles
+   after warmup);
+3. **hot-swap** — a :class:`CheckpointWatcher` polls the checkpoint
+   directory; training continues mid-traffic and the watcher atomically
+   swaps the improved centroids in without dropping a single request.
 
     PYTHONPATH=src python examples/serve_assignments.py
+    PYTHONPATH=src python examples/serve_assignments.py \
+        --chunks 24 --clients 4 --requests 30        # CI-sized
 """
+import argparse
 import os
 import tempfile
-import time
+import threading
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.api import BigMeansConfig, fit, synthetic
-from repro.cluster import checkpoint
-from repro.core import bigmeans
-from repro.kernels import ops
+from repro.api import BigMeansConfig, ServeConfig, fit, serve, synthetic
 
 SPEC = synthetic.GMMSpec(m=1_000_000, n=12, components=10, seed=5)
 
 
+def provider(chunk_id: int) -> np.ndarray:
+    return np.asarray(synthetic.gmm_chunk(SPEC, chunk_id, 4096))
+
+
 def main():
-    # "train": quick clustering run through the facade, checkpointed
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--chunks", type=int, default=40,
+                    help="chunks for the initial training stage")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=60,
+                    help="requests per client")
+    args = ap.parse_args()
+
+    # -- train: checkpointed streaming fit through the facade ---------------
     ckpt = os.path.join(tempfile.gettempdir(), "bigmeans_serve_ckpt")
-    cfg = BigMeansConfig(k=10, s=4096, n_chunks=40, ckpt_dir=ckpt,
-                         ckpt_every=20, seed=0, resume=False)
-    result = fit(lambda cid: np.asarray(synthetic.gmm_chunk(SPEC, cid, 4096)),
-                 cfg, method="streaming", n_features=SPEC.n)
+    cfg = BigMeansConfig(k=10, s=4096, n_chunks=args.chunks, ckpt_dir=ckpt,
+                         ckpt_every=max(1, args.chunks // 2), seed=0,
+                         resume=False)
+    result = fit(provider, cfg, method="streaming", n_features=SPEC.n)
     print(f"trained: {result.summary()}")
 
-    # "serve": load centroids from the checkpoint, answer batched requests
-    (restored, _key), step = checkpoint.restore(
-        ckpt, (bigmeans.init_state(cfg.k, SPEC.n), jax.random.PRNGKey(0)))
-    centroids = restored.centroids
-    print(f"serving centroids from checkpoint step {step}")
+    # -- serve: concurrent clients against the registered model ------------
+    serve_cfg = ServeConfig(min_bucket=64, max_batch=1024, max_linger_ms=2.0)
+    rng = np.random.default_rng(0)
+    done = []
 
-    assign = jax.jit(lambda q: ops.assign(q, centroids, impl="ref")[0])
-    latencies = []
-    for req in range(20):
-        batch = jnp.asarray(np.asarray(
-            synthetic.gmm_chunk(SPEC, 50_000 + req, 256)))   # client batch
-        t0 = time.monotonic()
-        ids = assign(batch)
-        ids.block_until_ready()
-        latencies.append((time.monotonic() - t0) * 1e3)
-    print(f"20 requests x 256 vectors: p50={np.percentile(latencies, 50):.2f}ms "
-          f"p99={np.percentile(latencies, 99):.2f}ms")
-    print("cluster histogram of last batch:",
-          np.bincount(np.asarray(ids), minlength=10).tolist())
+    with serve({"gmm": result}, serve_cfg) as srv:
+        watcher = srv.watch("gmm", ckpt, poll_interval_s=0.05)
+
+        def client(cid: int) -> None:
+            n_ok, versions = 0, set()
+            for req in range(args.requests):
+                batch = provider(50_000 + cid * args.requests + req)
+                batch = batch[: int(rng.integers(32, 256))]
+                resp = srv.assign("gmm", batch)
+                versions.add(resp.version)
+                n_ok += 1
+            done.append((cid, n_ok, versions))
+
+        threads = [threading.Thread(target=client, args=(cid,), daemon=True)
+                   for cid in range(args.clients)]
+        for t in threads:
+            t.start()
+
+        # -- hot-swap: training continues while traffic flows ---------------
+        more = fit(provider, cfg, method="streaming", n_features=SPEC.n,
+                   resume=True, n_chunks=args.chunks * 2)
+        print(f"retrained: {more.summary()}")
+
+        for t in threads:
+            t.join()
+
+        stats = srv.stats("gmm")
+        print(f"served {stats['n_requests']} requests in "
+              f"{stats['n_batches']} launches "
+              f"({stats['requests_per_batch']:.2f} req/launch): "
+              f"p50={stats.get('p50_ms', 0):.2f}ms "
+              f"p99={stats.get('p99_ms', 0):.2f}ms")
+        print(f"recompiles after warmup: "
+              f"{stats['recompiles'] - len(serve_cfg.buckets())} "
+              f"(buckets: {serve_cfg.buckets()})")
+        print(f"hot-swaps applied: {watcher.n_swaps} "
+              f"(serving step {stats['step']}); trace: {srv.trace}")
+
+    total = sum(n for _, n, _ in done)
+    versions = set().union(*(v for _, _, v in done))
+    assert total == args.clients * args.requests, "dropped requests!"
+    print(f"all {total} client requests completed; "
+          f"centroid versions observed: {sorted(versions)}")
 
 
 if __name__ == "__main__":

@@ -47,6 +47,10 @@ from repro.cluster.runner import EndOfStream
 # `repro.api` imports alone.
 from repro.data import synthetic as synthetic
 
+# The assignment-serving subsystem (see repro.serve): training produces the
+# centroids, serve() is how their value is realized at assignment time.
+from repro.serve import ServeConfig, Server, serve
+
 __all__ = [
     "ArraySource",
     "BigMeansConfig",
@@ -68,6 +72,9 @@ __all__ = [
     "register_baseline",
     "register_strategy",
     "resolve_auto",
+    "serve",
+    "ServeConfig",
+    "Server",
     "sources",
     "strategies",
     "synthetic",

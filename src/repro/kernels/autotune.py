@@ -147,9 +147,18 @@ def candidates(kind: str, *, b: int, m: int, k: int, n: int,
                         continue
                     out.append(cand)
     elif kind == "assign":
-        for bm in (128, 256, 512):
-            for bf in (256, 512):
-                out.append({"block_m": bm, "block_k": 128, "block_f": bf})
+        # Serving-shaped calls (small m, large k) need different tilings
+        # from the training hot path: block_m candidates above the actual
+        # point count collapse to one launch shape (assign_pallas clamps
+        # to max(8, m), so they are deduped here), and once k exceeds one
+        # centroid tile the [bm, bk] reduce amortizes over wider block_k.
+        bms = sorted({min(bm, max(8, m)) for bm in (128, 256, 512)})
+        bks = [bk for bk in (128, 256, 512) if bk == 128 or k > bk // 2]
+        for bm in bms:
+            for bk in bks:
+                for bf in (256, 512):
+                    out.append({"block_m": bm, "block_k": bk,
+                                "block_f": bf})
     else:
         raise ValueError(f"unknown autotune kind {kind!r}")
     # Defaults first, so ties keep historic behaviour.  For fused_batched

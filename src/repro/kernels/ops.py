@@ -184,6 +184,42 @@ def _assign_chunked(x, c, *, chunk, precision="f32"):
     return ids.reshape(-1)[:m], d.reshape(-1)[:m]
 
 
+def warm_assign(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    impl: str = "auto",
+    precision: str = "auto",
+    dtype=jnp.float32,
+) -> str:
+    """Eagerly exercise the :func:`assign` dispatch at a concrete shape.
+
+    Callers that run ``assign`` under their own ``jax.jit`` (the serving
+    batcher, ``lloyd``'s epilogue) never hit the eager machinery: under a
+    trace the autotune bench cannot time (``_bench`` returns None) and a
+    Pallas *compile* failure surfaces at the outer jit's compile time —
+    outside :func:`assign`'s try/except, so nothing demotes and the caller
+    crashes.  ``fit()`` solves this for ``fused_step`` by pre-tuning with
+    concrete arrays; this is the same move packaged for bare ``assign``:
+    one cheap eager call at ``(m, k, n)`` consults/populates the autotune
+    cache and, if the Pallas build fails, demotes exactly this
+    serving-shaped key to the ref path — off the request path, once.
+
+    Returns the impl the shape will actually run after warmup
+    (``'ref'`` when the Pallas path demoted).
+    """
+    impl = resolve_impl(impl)
+    x = jnp.zeros((m, n), dtype)
+    c = jnp.zeros((k, n), dtype)
+    prec = px.resolve(precision, x.dtype)
+    jax.block_until_ready(assign(x, c, impl=impl, precision=prec))
+    if impl in ("pallas", "pallas_interpret") and _demoted(
+            ("assign", impl, (1, m, k, n), prec)):
+        return "ref"
+    return impl
+
+
 def update(
     x: jax.Array,
     ids: jax.Array,

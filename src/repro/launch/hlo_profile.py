@@ -56,7 +56,7 @@ if __name__ == "__main__":
     import dataclasses
 
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--arch", default="hymba-1.5b")
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--set", default="")

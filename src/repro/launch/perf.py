@@ -7,7 +7,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 Compiles one (arch x shape) cell on the single-pod mesh with a named set of
 optimization flags and appends the roofline record to results/perf.jsonl:
 
-    PYTHONPATH=src python -m repro.launch.perf --arch llama3.2-1b \
+    PYTHONPATH=src python -m repro.launch.perf --arch hymba-1.5b \
         --shape train_4k --variant blockwise --set blockwise_attn=1024
 
 Variants compare against the paper-faithful/naive `base` variant; each run

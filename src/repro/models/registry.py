@@ -4,12 +4,10 @@ from __future__ import annotations
 import importlib
 
 _ARCH_MODULES = {
-    "llama3.2-1b": "llama3_2_1b",
     "hymba-1.5b": "hymba_1_5b",
     "seamless-m4t-medium": "seamless_m4t_medium",
     "deepseek-moe-16b": "deepseek_moe_16b",
     "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
-    "mamba2-2.7b": "mamba2_2_7b",
     "bigmeans_paper": "bigmeans_paper",
 }
 

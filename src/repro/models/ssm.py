@@ -6,9 +6,9 @@ is evaluated as a masked, decay-weighted attention-like contraction (MXU
 work), while cross-chunk information flows through a small per-chunk state
 recurrence ([B,H,P,N] carry, lax.scan).  Decode is the O(1) state update.
 
-Used standalone (mamba2-2.7b) and as the SSM path of Hymba's hybrid blocks
-(smaller state size).  n_groups = 1 (B/C shared across heads), as in the
-released 2.7b model.
+Used as the SSM path of Hymba's hybrid blocks (hymba-1.5b, small state
+size).  n_groups = 1 (B/C shared across heads), as in the released Mamba2
+models.
 """
 from __future__ import annotations
 

@@ -1,0 +1,53 @@
+"""`repro.serve` — the batching assignment-serving subsystem.
+
+The paper's end product is a centroid set whose value is realized at
+assignment time; point-to-centroid lookup is itself a streaming big-data
+workload.  This package productionizes it:
+
+* :class:`Batcher` — coalesces concurrent client requests into one jitted
+  assign launch: power-of-two padded shape buckets (zero recompiles after
+  warmup), a bounded queue with a max-linger deadline, optional donated
+  device buffers, per-request latency accounting.
+* :class:`ModelRegistry` — multi-model tenancy: several (k, n) centroid
+  sets resident at once, each with its own precision/impl policy routed
+  through the autotuned ``kernels/ops.assign`` dispatch.
+* :mod:`repro.serve.swap` — hot-swap: atomically replace a model's
+  serving centroids (directly, or from the newest intact SHA-256-verified
+  checkpoint) without dropping or re-queuing in-flight requests;
+  :class:`CheckpointWatcher` automates it.
+* :class:`Server` / :func:`serve` — the assembled service, also exported
+  from ``repro.api``.
+
+See ``benchmarks/serve_latency.py`` for the p50/p99/throughput benchmark
+and the README "Serving" section for the architecture sketch.
+"""
+from repro.serve.batcher import (
+    AssignResponse,
+    Batcher,
+    QueueFull,
+    ServerClosed,
+)
+from repro.serve.config import ServeConfig
+from repro.serve.registry import CentroidSnapshot, ModelEntry, ModelRegistry
+from repro.serve.server import Server, serve
+from repro.serve.swap import (
+    CheckpointWatcher,
+    load_centroids,
+    swap_from_checkpoint,
+)
+
+__all__ = [
+    "AssignResponse",
+    "Batcher",
+    "CentroidSnapshot",
+    "CheckpointWatcher",
+    "ModelEntry",
+    "ModelRegistry",
+    "QueueFull",
+    "ServeConfig",
+    "Server",
+    "ServerClosed",
+    "load_centroids",
+    "serve",
+    "swap_from_checkpoint",
+]

@@ -1,0 +1,254 @@
+"""The batching frontend: coalesce concurrent requests into one launch.
+
+Serving traffic is many small point batches arriving concurrently; the
+kernel wants one large launch.  Each model gets one :class:`Batcher`: a
+bounded queue plus a worker thread that
+
+1. blocks for the first pending request,
+2. lingers up to ``max_linger_ms`` pulling whole requests while they fit
+   under ``max_batch`` (a request is never split across launches — one
+   response always comes from exactly one launch, hence exactly one
+   centroid snapshot),
+3. pads the coalesced rows to the next power-of-two bucket (the jit cache
+   therefore holds one executable per bucket and never recompiles per
+   request size),
+4. reads the model's centroid snapshot *once*, launches, and scatters the
+   results back to each request's future with per-request latency
+   accounting.
+
+Admission is fail-fast: a full queue raises :class:`QueueFull` at submit
+time — clients get backpressure immediately instead of a hang.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.serve.config import ServeConfig, _next_pow2
+from repro.serve.registry import ModelEntry
+
+
+class QueueFull(RuntimeError):
+    """The model's request queue is at ``queue_depth``; retry later."""
+
+
+class ServerClosed(RuntimeError):
+    """The server (or this model's batcher) has been shut down."""
+
+
+@dataclass
+class AssignResponse:
+    """One request's results plus its serving telemetry.
+
+    ``version`` / ``step`` identify the exact centroid snapshot that
+    served this response (one snapshot per response, by construction);
+    ``batch_rows`` / ``n_coalesced`` describe the launch it rode in;
+    ``latency_ms`` is submit-to-completion, queueing and linger included.
+    """
+
+    ids: np.ndarray         # [m] int32 cluster ids
+    dists: np.ndarray       # [m] f32 squared distances
+    model_id: str
+    version: int
+    step: int | None
+    latency_ms: float
+    batch_rows: int         # padded bucket rows of the launch
+    n_coalesced: int        # requests coalesced into the launch
+
+
+class _Request:
+    __slots__ = ("points", "future", "t_submit")
+
+    def __init__(self, points: np.ndarray):
+        self.points = points
+        self.future: Future = Future()
+        self.t_submit = time.monotonic()
+
+
+class BatcherStats:
+    """Mutable per-model serving counters (snapshot via ``to_dict``)."""
+
+    def __init__(self, maxlen: int = 20000):
+        self.lock = threading.Lock()
+        self.latencies_ms = collections.deque(maxlen=maxlen)
+        self.n_requests = 0
+        self.n_rejected = 0
+        self.n_batches = 0
+        self.n_points = 0
+        self.n_padded_rows = 0
+
+    def record_batch(self, reqs: list, bucket: int) -> None:
+        with self.lock:
+            self.n_batches += 1
+            rows = sum(r.points.shape[0] for r in reqs)
+            self.n_points += rows
+            self.n_padded_rows += bucket - rows
+
+    def record_latency(self, ms: float) -> None:
+        with self.lock:
+            self.latencies_ms.append(ms)
+
+    def to_dict(self) -> dict:
+        with self.lock:
+            lat = np.asarray(self.latencies_ms, dtype=np.float64)
+            out = {
+                "n_requests": self.n_requests,
+                "n_rejected": self.n_rejected,
+                "n_batches": self.n_batches,
+                "n_points": self.n_points,
+                "n_padded_rows": self.n_padded_rows,
+                "requests_per_batch": (
+                    self.n_requests / self.n_batches if self.n_batches else 0.0),
+            }
+        if lat.size:
+            out["p50_ms"] = float(np.percentile(lat, 50))
+            out["p99_ms"] = float(np.percentile(lat, 99))
+            out["mean_ms"] = float(lat.mean())
+        return out
+
+
+class Batcher:
+    """One model's bounded queue + coalescing worker thread."""
+
+    def __init__(self, entry: ModelEntry, config: ServeConfig):
+        self._entry = entry
+        self._cfg = config
+        self._buckets = config.buckets()
+        self._queue: collections.deque[_Request] = collections.deque()
+        self._cond = threading.Condition()
+        self._closed = False
+        self.stats = BatcherStats()
+        self._worker = threading.Thread(
+            target=self._run, name=f"serve-{entry.model_id}", daemon=True)
+        self._worker.start()
+
+    # -- client side --------------------------------------------------------
+    def submit(self, points) -> Future:
+        """Enqueue one request; returns a Future[AssignResponse].
+
+        Raises :class:`QueueFull` when ``queue_depth`` requests are already
+        pending and :class:`ServerClosed` after shutdown — both immediately,
+        never by blocking the caller.
+        """
+        pts = np.asarray(points, dtype=np.float32)
+        if pts.ndim == 1:
+            pts = pts[None, :]
+        n = self._entry.snapshot().n_features
+        if pts.ndim != 2 or pts.shape[1] != n:
+            raise ValueError(
+                f"request points must be [m, {n}], got {pts.shape}")
+        if pts.shape[0] == 0:
+            raise ValueError("empty request")
+        if pts.shape[0] > self._cfg.max_batch:
+            raise ValueError(
+                f"request of {pts.shape[0]} points exceeds "
+                f"max_batch={self._cfg.max_batch}; split it client-side")
+        req = _Request(pts)
+        with self._cond:
+            if self._closed:
+                raise ServerClosed(
+                    f"model {self._entry.model_id!r} is not serving")
+            if len(self._queue) >= self._cfg.queue_depth:
+                with self.stats.lock:
+                    self.stats.n_rejected += 1
+                raise QueueFull(
+                    f"model {self._entry.model_id!r}: {len(self._queue)} "
+                    f"requests pending (queue_depth="
+                    f"{self._cfg.queue_depth}); retry with backoff")
+            self._queue.append(req)
+            with self.stats.lock:
+                self.stats.n_requests += 1
+            self._cond.notify()
+        return req.future
+
+    # -- worker side --------------------------------------------------------
+    def _take_batch(self) -> list[_Request] | None:
+        """Block for the first request, then linger to coalesce more."""
+        with self._cond:
+            while not self._queue and not self._closed:
+                self._cond.wait()
+            if not self._queue:
+                return None                      # closed and drained
+            batch = [self._queue.popleft()]
+        total = batch[0].points.shape[0]
+        deadline = batch[0].t_submit + self._cfg.max_linger_ms / 1e3
+        while total < self._cfg.max_batch:
+            with self._cond:
+                if self._queue:
+                    m = self._queue[0].points.shape[0]
+                    if total + m > self._cfg.max_batch:
+                        break                    # next request rides later
+                    batch.append(self._queue.popleft())
+                    total += m
+                    continue
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 or self._closed:
+                    break
+                self._cond.wait(remaining)
+        return batch
+
+    def _bucket_for(self, rows: int) -> int:
+        b = max(_next_pow2(rows), self._buckets[0])
+        return min(b, self._buckets[-1])
+
+    def _launch(self, batch: list[_Request]) -> None:
+        rows = sum(r.points.shape[0] for r in batch)
+        bucket = self._bucket_for(rows)
+        snap = self._entry.snapshot()            # ONE snapshot per launch
+        buf = np.zeros((bucket, snap.n_features), dtype=np.float32)
+        off = 0
+        for r in batch:
+            m = r.points.shape[0]
+            buf[off:off + m] = r.points
+            off += m
+        ids, dists = self._entry.launch(jax.numpy.asarray(buf), snap)
+        t_done = time.monotonic()
+        self.stats.record_batch(batch, bucket)
+        off = 0
+        for r in batch:
+            m = r.points.shape[0]
+            latency_ms = (t_done - r.t_submit) * 1e3
+            self.stats.record_latency(latency_ms)
+            r.future.set_result(AssignResponse(
+                ids=ids[off:off + m].copy(),
+                dists=dists[off:off + m].copy(),
+                model_id=self._entry.model_id,
+                version=snap.version,
+                step=snap.step,
+                latency_ms=latency_ms,
+                batch_rows=bucket,
+                n_coalesced=len(batch)))
+            off += m
+
+    def _run(self) -> None:
+        while True:
+            batch = self._take_batch()
+            if batch is None:
+                return
+            try:
+                self._launch(batch)
+            except Exception as exc:            # pragma: no cover - safety
+                for r in batch:
+                    if not r.future.done():
+                        r.future.set_exception(exc)
+
+    def close(self, drain: bool = True) -> None:
+        """Stop accepting requests; finish (or fail) what is queued."""
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            pending = [] if drain else list(self._queue)
+            if not drain:
+                self._queue.clear()
+            self._cond.notify_all()
+        for r in pending:
+            r.future.set_exception(
+                ServerClosed(f"model {self._entry.model_id!r} shut down"))
+        self._worker.join(timeout=10.0)

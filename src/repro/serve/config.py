@@ -1,0 +1,129 @@
+"""`ServeConfig` — every knob of the assignment-serving subsystem.
+
+Serving has a different shape from training: many small concurrent
+requests instead of a few huge chunks, so the knobs are about *coalescing*
+(how long to wait, how much to pack into one launch) and *admission* (how
+deep the queue may grow before clients are told to back off) rather than
+chunk budgets.  One config drives every model the server hosts; precision
+and kernel impl can still be overridden per model at registration time.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.kernels import ops
+from repro.kernels import precision as px
+
+_DONATE_MODES = ("auto", "on", "off")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Validated configuration for one :class:`repro.serve.Server`.
+
+    Batching frontend:
+
+    * ``max_batch`` — most points one coalesced launch may carry; also the
+      largest padded shape bucket.  Rounded up to a power of two.
+    * ``min_bucket`` — smallest padded launch shape.  Requests are padded to
+      the next power-of-two bucket in ``[min_bucket, max_batch]`` so the
+      jitted assign call sees a small, fixed set of shapes and never
+      recompiles per request size.
+    * ``max_linger_ms`` — how long the batcher may hold the first request of
+      a batch waiting for more to coalesce (the latency/throughput knob:
+      0 launches immediately, a few ms packs concurrent clients together).
+    * ``queue_depth`` — max requests pending per model; beyond it
+      :meth:`Server.submit` raises :class:`repro.serve.QueueFull`
+      immediately (graceful rejection, never a hang).
+
+    Kernel dispatch (defaults for every model; overridable per model):
+
+    * ``impl`` — kernel implementation (``'auto'`` resolves via
+      :func:`repro.kernels.ops.resolve_impl`; the autotuned Pallas path on
+      TPU backends, the jnp reference elsewhere).
+    * ``precision`` — per-model precision policy routed through
+      ``kernels/ops.assign`` (see :mod:`repro.kernels.precision`).
+    * ``donate`` — donate the padded request buffer to the jitted assign
+      call (``'auto'`` = on for accelerator backends, off on CPU where
+      XLA cannot alias host buffers and would warn per launch).
+    * ``warmup`` — at registration, eagerly run every shape bucket through
+      the demotion-aware, autotune-consulting dispatch and compile the
+      jitted call, so autotuning/demotion/compilation all happen off the
+      request path (zero recompiles once traffic starts).
+
+    Hot-swap:
+
+    * ``poll_interval_s`` — how often a :class:`repro.serve.CheckpointWatcher`
+      polls its checkpoint directory for a newer intact step.
+    """
+
+    max_batch: int = 4096
+    min_bucket: int = 64
+    max_linger_ms: float = 2.0
+    queue_depth: int = 256
+    impl: str = "auto"
+    precision: str = "auto"
+    donate: str = "auto"
+    warmup: bool = True
+    poll_interval_s: float = 0.2
+
+    def __post_init__(self):
+        def _positive(name, value):
+            if not isinstance(value, int) or isinstance(value, bool) \
+                    or value < 1:
+                raise ValueError(
+                    f"{name} must be a positive int, got {value!r}")
+
+        _positive("max_batch", self.max_batch)
+        _positive("min_bucket", self.min_bucket)
+        _positive("queue_depth", self.queue_depth)
+        if self.min_bucket > self.max_batch:
+            raise ValueError(
+                f"min_bucket={self.min_bucket} must be <= "
+                f"max_batch={self.max_batch}")
+        if self.max_linger_ms < 0:
+            raise ValueError(
+                f"max_linger_ms must be >= 0, got {self.max_linger_ms!r}")
+        if self.poll_interval_s <= 0:
+            raise ValueError(
+                f"poll_interval_s must be positive, "
+                f"got {self.poll_interval_s!r}")
+        if self.impl != "auto" and self.impl not in ops.IMPLS:
+            raise ValueError(
+                f"unknown impl {self.impl!r}; known: ('auto',) + {ops.IMPLS}")
+        if self.precision != "auto":
+            px.check(self.precision)
+        if self.donate not in _DONATE_MODES:
+            raise ValueError(
+                f"donate must be one of {_DONATE_MODES}, got {self.donate!r}")
+        if not isinstance(self.warmup, bool):
+            raise ValueError(f"warmup must be a bool, got {self.warmup!r}")
+
+    def replace(self, **overrides) -> "ServeConfig":
+        """A copy with ``overrides`` applied (re-validated)."""
+        return dataclasses.replace(self, **overrides)
+
+    def buckets(self) -> tuple[int, ...]:
+        """The padded power-of-two launch shapes, ascending.
+
+        Every coalesced batch is padded up to the smallest bucket that
+        holds it, so the jit cache holds exactly ``len(buckets())``
+        entries per model and a new request size never triggers a
+        recompile after warmup.
+        """
+        lo = _next_pow2(self.min_bucket)
+        hi = _next_pow2(self.max_batch)
+        out = []
+        b = lo
+        while b < hi:
+            out.append(b)
+            b *= 2
+        out.append(hi)
+        return tuple(out)
+
+
+def _next_pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p

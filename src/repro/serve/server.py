@@ -1,0 +1,180 @@
+"""`Server` — the assembled serving subsystem, and the `serve()` entry point.
+
+Wiring: ``Server`` owns one :class:`~repro.serve.registry.ModelRegistry`
+(tenancy + hot-swap) and one :class:`~repro.serve.batcher.Batcher` per
+model (coalescing + admission), plus any :class:`CheckpointWatcher`
+threads.  ``repro.api.serve()`` is the facade constructor::
+
+    from repro.api import ServeConfig, fit, serve
+
+    result = fit(X, k=25, s=8192, ckpt_dir="ckpt")
+    with serve({"prod": result}, ServeConfig(max_linger_ms=2.0)) as srv:
+        srv.watch("prod", "ckpt")                  # hot-swap on new ckpts
+        resp = srv.assign("prod", queries)         # -> AssignResponse
+"""
+from __future__ import annotations
+
+from concurrent.futures import Future
+
+from repro.serve.batcher import AssignResponse, Batcher
+from repro.serve.config import ServeConfig
+from repro.serve.registry import CentroidSnapshot, ModelEntry, ModelRegistry
+from repro.serve.swap import CheckpointWatcher, swap_from_checkpoint
+
+
+class Server:
+    """A running multi-model assignment service (in-process)."""
+
+    def __init__(self, config: ServeConfig | None = None):
+        self.config = config or ServeConfig()
+        self.registry = ModelRegistry()
+        self._batchers: dict[str, Batcher] = {}
+        self._watchers: list[CheckpointWatcher] = []
+        self._closed = False
+
+    # -- tenancy ------------------------------------------------------------
+    def register(self, model_id: str, centroids, *, impl: str | None = None,
+                 precision: str | None = None,
+                 warmup: bool | None = None) -> ModelEntry:
+        """Make ``model_id`` servable.  ``centroids`` is a [k, n] array or
+        anything with a ``.centroids`` field (e.g. a ``FitResult``).
+
+        ``impl`` / ``precision`` default to the server config (so tenants
+        can run different precision policies side by side); with ``warmup``
+        every shape bucket is autotuned/demotion-probed and compiled now,
+        off the request path.
+        """
+        import jax
+
+        cfg = self.config
+        donate = {"on": True, "off": False}.get(
+            cfg.donate, jax.default_backend() not in ("cpu",))
+        entry = self.registry.register(
+            model_id, centroids,
+            impl=cfg.impl if impl is None else impl,
+            precision=cfg.precision if precision is None else precision,
+            donate=donate)
+        if cfg.warmup if warmup is None else warmup:
+            entry.warmup(cfg.buckets())
+        self._batchers[model_id] = Batcher(entry, cfg)
+        return entry
+
+    def unregister(self, model_id: str) -> None:
+        batcher = self._batchers.pop(model_id, None)
+        if batcher is not None:
+            batcher.close()
+        self.registry.unregister(model_id)
+
+    def models(self) -> list[str]:
+        return self.registry.list_models()
+
+    # -- request path -------------------------------------------------------
+    def submit(self, model_id: str, points) -> Future:
+        """Enqueue a request; returns ``Future[AssignResponse]``.
+
+        Raises :class:`repro.serve.QueueFull` immediately on a saturated
+        queue (graceful rejection) and ``KeyError`` for unknown models.
+        """
+        try:
+            batcher = self._batchers[model_id]
+        except KeyError:
+            raise KeyError(
+                f"unknown model {model_id!r}; registered: "
+                f"{self.models()}") from None
+        return batcher.submit(points)
+
+    def assign(self, model_id: str, points,
+               timeout: float | None = 60.0) -> AssignResponse:
+        """Synchronous convenience wrapper around :meth:`submit`."""
+        return self.submit(model_id, points).result(timeout=timeout)
+
+    # -- hot-swap -----------------------------------------------------------
+    def swap(self, model_id: str, centroids, *,
+             step: int | None = None) -> CentroidSnapshot:
+        """Atomically replace ``model_id``'s serving centroids."""
+        return self.registry.swap(model_id, centroids, step=step)
+
+    def swap_from_checkpoint(self, model_id: str, ckpt_dir: str, *,
+                             step: int | None = None) -> CentroidSnapshot:
+        """Refresh from the newest intact (SHA-256-verified) checkpoint."""
+        return swap_from_checkpoint(self.registry, model_id, ckpt_dir,
+                                    step=step)
+
+    def watch(self, model_id: str, ckpt_dir: str, *,
+              poll_interval_s: float | None = None) -> CheckpointWatcher:
+        """Start a background watcher hot-swapping ``model_id`` whenever a
+        newer intact checkpoint appears under ``ckpt_dir``."""
+        watcher = CheckpointWatcher(
+            self.registry, model_id, ckpt_dir,
+            poll_interval_s=poll_interval_s or self.config.poll_interval_s)
+        self._watchers.append(watcher)
+        return watcher.start()
+
+    # -- telemetry ----------------------------------------------------------
+    @property
+    def trace(self) -> list:
+        """Structured serving events (currently ``("swap", id, step)``)."""
+        return self.registry.trace
+
+    def stats(self, model_id: str | None = None) -> dict:
+        """Per-model serving stats: latency percentiles, batch shapes,
+        rejection and recompile counters."""
+        def one(mid: str) -> dict:
+            entry = self.registry.get(mid)
+            out = self._batchers[mid].stats.to_dict()
+            snap = entry.snapshot()
+            out.update({
+                "model_id": mid,
+                "k": snap.k,
+                "n_features": snap.n_features,
+                "version": snap.version,
+                "step": snap.step,
+                "impl": entry.impl,
+                "precision": entry.precision,
+                "recompiles": entry.recompiles,
+                "n_swaps": snap.version,
+            })
+            return out
+
+        if model_id is not None:
+            return one(model_id)
+        return {mid: one(mid) for mid in self.models()}
+
+    def recompiles(self, model_id: str) -> int:
+        return self.registry.get(model_id).recompiles
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self, drain: bool = True) -> None:
+        """Stop watchers, drain (or abort) queues, stop workers."""
+        if self._closed:
+            return
+        self._closed = True
+        for watcher in self._watchers:
+            watcher.stop()
+        for batcher in self._batchers.values():
+            batcher.close(drain=drain)
+
+    def __enter__(self) -> "Server":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def serve(models: dict | None = None,
+          config: ServeConfig | None = None, **overrides) -> Server:
+    """Build and return a running :class:`Server`.
+
+    * ``models`` — optional ``{model_id: centroids_or_FitResult}`` to
+      register up front (each fully warmed before the call returns, so the
+      first request never pays compilation).
+    * ``config`` / ``overrides`` — a :class:`ServeConfig`, with field
+      overrides applied on top (``serve(models, max_linger_ms=5.0)``).
+    """
+    cfg = config or ServeConfig()
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    server = Server(cfg)
+    for model_id, centroids in (models or {}).items():
+        server.register(model_id, centroids)
+    return server

@@ -1,0 +1,143 @@
+"""Hot-swap: refresh serving centroids from training checkpoints.
+
+The training stack writes SHA-256-digested checkpoints
+(:mod:`repro.cluster.checkpoint`); this module is the serving-side
+consumer.  :func:`load_centroids` restores the newest *intact* step
+through the verified restore path (a torn or bit-rotted newest step falls
+back, never serves garbage), understands both the engine's
+``((state, key), vns_aux)`` payload and the legacy ``(state, key)`` one,
+and reduces a batched incumbent state to its best stream.  A
+:class:`CheckpointWatcher` polls a directory and swaps the registry
+pointer whenever a newer intact step appears — traffic keeps flowing
+through the swap (see :meth:`repro.serve.registry.ModelEntry.swap`).
+"""
+from __future__ import annotations
+
+import threading
+
+import jax
+import numpy as np
+
+from repro.cluster import checkpoint
+from repro.serve.registry import CentroidSnapshot, ModelRegistry
+
+
+def _example_tree(k: int, n: int, n_leaves: int):
+    """The restore skeleton matching a stored payload's leaf count.
+
+    The streaming engine persists ``((BigMeansState, key), aux[3])``
+    (7 leaves); pre-engine checkpoints stored ``(BigMeansState, key)``
+    (6 leaves).  Leaf *shapes* in the example are irrelevant — restore
+    fills in the stored arrays — only structure and count matter.
+    """
+    from repro.core import bigmeans
+
+    legacy = (bigmeans.init_state(k, n), jax.random.PRNGKey(0))
+    n_legacy = len(jax.tree.leaves(legacy))
+    if n_leaves == n_legacy:
+        return legacy, False
+    if n_leaves == n_legacy + 1:
+        return (legacy, np.zeros(3, np.int64)), True
+    raise ValueError(
+        f"unrecognized checkpoint payload: {n_leaves} leaves "
+        f"(expected {n_legacy} or {n_legacy + 1})")
+
+
+def load_centroids(ckpt_dir: str, *, step: int | None = None
+                   ) -> tuple[np.ndarray, int]:
+    """Load ``(centroids [k, n], step)`` from the newest intact checkpoint.
+
+    Only steps passing the SHA-256 digest check are considered (PR-6
+    self-healing semantics); a batched state's streams are reduced to the
+    one with the best (finite, minimal) ``f_best``.
+    """
+    if step is None:
+        step = checkpoint.latest_intact_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(
+                f"no intact checkpoint under {ckpt_dir}")
+    elif not checkpoint.verify_step(ckpt_dir, step):
+        raise ValueError(
+            f"checkpoint step {step} under {ckpt_dir} fails verification")
+    n_leaves = checkpoint.n_leaves(ckpt_dir, step)
+    example, engine_payload = _example_tree(1, 1, n_leaves)
+    tree, got_step = checkpoint.restore(ckpt_dir, example, step=step)
+    state = tree[0][0] if engine_payload else tree[0]
+    centroids = np.asarray(state.centroids, dtype=np.float32)
+    if centroids.ndim == 3:                      # batched incumbent streams
+        f_best = np.asarray(state.f_best, dtype=np.float64).reshape(-1)
+        f_best = np.where(np.isfinite(f_best), f_best, np.inf)
+        centroids = centroids[int(np.argmin(f_best))]
+    if centroids.ndim != 2:
+        raise ValueError(
+            f"checkpoint centroids have shape {centroids.shape}, "
+            "expected [k, n] or [B, k, n]")
+    return centroids, int(got_step)
+
+
+def swap_from_checkpoint(registry: ModelRegistry, model_id: str,
+                         ckpt_dir: str, *, step: int | None = None
+                         ) -> CentroidSnapshot:
+    """One-shot refresh: load the newest intact step and swap it in."""
+    centroids, got_step = load_centroids(ckpt_dir, step=step)
+    return registry.swap(model_id, centroids, step=got_step)
+
+
+class CheckpointWatcher:
+    """Background thread: poll a checkpoint dir, hot-swap on new steps.
+
+    The watcher only ever moves *forward* (a step newer than the last one
+    it swapped in) and only through intact checkpoints, so a torn write
+    mid-poll is skipped until the next complete save.  Swap failures are
+    recorded (``last_error``) and retried next poll instead of killing the
+    thread — serving continues on the current snapshot.
+    """
+
+    def __init__(self, registry: ModelRegistry, model_id: str,
+                 ckpt_dir: str, *, poll_interval_s: float = 0.2):
+        self.registry = registry
+        self.model_id = model_id
+        self.ckpt_dir = ckpt_dir
+        self.poll_interval_s = poll_interval_s
+        self.n_swaps = 0
+        self.last_step: int | None = None
+        self.last_error: str | None = None
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._run, name=f"swap-{model_id}", daemon=True)
+
+    def start(self) -> "CheckpointWatcher":
+        # Seed the high-water mark with what is already serving, so a
+        # watcher attached after a manual swap does not re-apply it.
+        snap = self.registry.get(self.model_id).snapshot()
+        if self.last_step is None:
+            self.last_step = snap.step
+        self._thread.start()
+        return self
+
+    def poll_once(self) -> bool:
+        """One poll: swap if a newer intact step exists.  True on swap."""
+        step = checkpoint.latest_intact_step(self.ckpt_dir)
+        if step is None or (self.last_step is not None
+                            and step <= self.last_step):
+            return False
+        try:
+            swap_from_checkpoint(self.registry, self.model_id,
+                                 self.ckpt_dir, step=step)
+        except Exception as exc:
+            self.last_error = f"{type(exc).__name__}: {exc}"
+            return False
+        self.last_step = step
+        self.n_swaps += 1
+        self.last_error = None
+        return True
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            self.poll_once()
+            self._stop.wait(self.poll_interval_s)
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread.is_alive():
+            self._thread.join(timeout=10.0)

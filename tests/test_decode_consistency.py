@@ -17,11 +17,9 @@ B, S, S0 = 2, 32, 24
 KEY = jax.random.PRNGKey(1)
 
 CASES = [
-    ("llama3.2-1b", 1e-3),
     ("seamless-m4t-medium", 1e-3),
     ("deepseek-moe-16b", 1e-3),
     ("hymba-1.5b", 0.15),
-    ("mamba2-2.7b", 0.15),
 ]
 
 

@@ -84,7 +84,7 @@ def test_roofline_terms():
 
 
 def test_model_flops_kinds():
-    cfg = get_config("llama3.2-1b")
+    cfg = get_config("hymba-1.5b")
     tr = roofline.model_flops(cfg, SHAPES["train_4k"])
     pf = roofline.model_flops(cfg, SHAPES["prefill_32k"])
     dc = roofline.model_flops(cfg, SHAPES["decode_32k"])
