@@ -180,6 +180,20 @@ class FaultPlan:
       NaN-poisoned / Inf-poisoned / wrong-shape data (sanitizer fodder).
     * ``stall_ids`` — fetches that sleep ``stall_s`` before returning
       (hung-provider simulation; pair with a ``fetch_timeout_s`` watchdog).
+
+    Serve-side faults (wired via :meth:`wrap_launch` around a
+    ``ModelEntry.launch``):
+
+    * ``launch_transient_rate`` — fraction of launch *indices* that raise
+      a :class:`TransientFault` (the batcher recovers them on the ref
+      path); a pure function of ``(seed, launch_index)``.
+    * ``launch_outage_after`` / ``launch_outage_len`` — a window of
+      consecutive launches that all raise :class:`PermanentFault` (a dead
+      model: bisection finds no healthy requests, the circuit breaker
+      trips).
+    * :meth:`wrap_launch` also fails any launch whose payload carries
+      non-finite values with a :class:`PermanentFault` — the "poisoned
+      request" a real kernel would choke on, isolatable only by bisection.
     """
 
     seed: int = 0
@@ -191,6 +205,9 @@ class FaultPlan:
     shape_ids: tuple = ()
     stall_ids: tuple = ()
     stall_s: float = 30.0
+    launch_transient_rate: float = 0.0
+    launch_outage_after: int | None = None
+    launch_outage_len: int = 0
 
     def is_transient(self, chunk_id: int) -> bool:
         if self.transient_rate <= 0.0:
@@ -251,6 +268,52 @@ class FaultPlan:
         inject.attempts = wrapped.attempts
         return inject
 
+    # -- serve-side injection ------------------------------------------------
+    def is_launch_transient(self, launch_index: int) -> bool:
+        if self.launch_transient_rate <= 0.0:
+            return False
+        rng = np.random.default_rng((self.seed, 0x1A47, launch_index))
+        return bool(rng.random() < self.launch_transient_rate)
+
+    def in_outage(self, launch_index: int) -> bool:
+        if self.launch_outage_after is None or self.launch_outage_len <= 0:
+            return False
+        return (self.launch_outage_after <= launch_index
+                < self.launch_outage_after + self.launch_outage_len)
+
+    def wrap_launch(self, launch):
+        """A ``(q, snapshot) -> (ids, dists)`` launch with faults injected.
+
+        Wrap a ``ModelEntry.launch`` with it (``entry.launch =
+        plan.wrap_launch(entry.launch)``) to chaos-test the serving path:
+        non-finite payloads fail permanently (the poisoned-request case
+        that only batch bisection can isolate), outage-window launches
+        fail permanently (a dead model — breaker fodder), and
+        ``launch_transient_rate`` launches fail transiently (ref-retry
+        fodder).  ``wrapped.calls`` counts invocations; which launches
+        fault is a pure function of ``(seed, launch_index)``.
+        """
+        calls: collections.Counter = collections.Counter()
+        lock = threading.Lock()
+
+        def wrapped(q, snapshot):
+            with lock:
+                idx = calls["n"]
+                calls["n"] += 1
+            if not bool(np.isfinite(np.asarray(q)).all()):
+                raise PermanentFault(
+                    f"injected: non-finite payload in launch {idx}")
+            if self.in_outage(idx):
+                raise PermanentFault(
+                    f"injected launch outage (launch {idx})")
+            if self.is_launch_transient(idx):
+                raise TransientFault(
+                    f"injected transient launch fault (launch {idx})")
+            return launch(q, snapshot)
+
+        wrapped.calls = calls
+        return wrapped
+
 
 def corrupt_checkpoint(directory: str, *, step: int | None = None,
                        keep_bytes: int = 64) -> str:
@@ -305,3 +368,33 @@ def kernel_failure(op: str = "fused", exc: Exception | None = None):
         yield
     finally:
         setattr(mod, name, original)
+
+
+@contextlib.contextmanager
+def hung_restore(stall_s: float | None = None):
+    """Monkeypatch checkpoint restore to *hang* for the duration.
+
+    Simulates an NFS-stalled checkpoint load against the serving
+    :class:`repro.serve.CheckpointWatcher`: inside the context every
+    ``checkpoint.restore`` call blocks (``stall_s`` seconds, or until the
+    context exits when ``None``) before proceeding, so a watcher poll that
+    reaches the load hangs and its ``poll_timeout_s`` watchdog must abandon
+    it.  Yields the release :class:`threading.Event` — set it early to
+    un-stall mid-test.  Exiting the context releases stalled calls (they
+    then complete normally, like a filesystem coming back).
+    """
+    from repro.cluster import checkpoint as ckpt_lib
+
+    original = ckpt_lib.restore
+    release = threading.Event()
+
+    def stalled(*args, **kwargs):
+        release.wait(stall_s)
+        return original(*args, **kwargs)
+
+    ckpt_lib.restore = stalled
+    try:
+        yield release
+    finally:
+        release.set()
+        ckpt_lib.restore = original

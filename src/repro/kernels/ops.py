@@ -66,6 +66,26 @@ def reset_kernel_demotions() -> None:
     _DEMOTIONS.clear()
 
 
+def record_demotion(op: str, impl: str, shape: tuple, precision: str,
+                    exc: Exception) -> None:
+    """Record a kernel failure observed *outside* the eager dispatch.
+
+    Callers that run an op under their own ``jax.jit`` (the serving
+    batcher) see Pallas failures escape at the outer compile, past the
+    dispatch's try/except, so nothing demotes automatically.  When such a
+    caller has classified the failure itself (e.g. repeated launch faults
+    at one serving bucket), this records the same demotion the eager path
+    would have taken: future eager dispatches at this key skip the Pallas
+    path, and :func:`kernel_demotions` reflects it for run health.
+    Idempotent per ``(op, impl, shape, precision)``.
+    """
+    if impl not in ("pallas", "pallas_interpret"):
+        return
+    key = (op, impl, tuple(shape), precision)
+    if not _demoted(key):
+        _demote(key, exc)
+
+
 def _demoted(key: tuple) -> bool:
     return key in _DEMOTIONS
 

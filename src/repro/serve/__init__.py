@@ -15,20 +15,33 @@ workload.  This package productionizes it:
   serving centroids (directly, or from the newest intact SHA-256-verified
   checkpoint) without dropping or re-queuing in-flight requests;
   :class:`CheckpointWatcher` automates it.
+* :mod:`repro.serve.resilience` — the serving fault discipline: typed
+  request failures (never a hang), per-model circuit breakers with seeded
+  half-open probes, deadline shedding, per-tenant quotas, fault-isolated
+  (classify → ref-retry → bisect) launches, and a supervised worker that
+  fails pending futures and restarts on crashes.
 * :class:`Server` / :func:`serve` — the assembled service, also exported
-  from ``repro.api``.
+  from ``repro.api``; ``Server.health()`` aggregates breaker states,
+  queue depths, worker/watcher liveness and swap ages.
 
-See ``benchmarks/serve_latency.py`` for the p50/p99/throughput benchmark
+See ``benchmarks/serve_latency.py`` for the p50/p99/throughput benchmark,
+``benchmarks/serve_chaos.py`` for the multi-tenant fault-injection proof,
 and the README "Serving" section for the architecture sketch.
 """
-from repro.serve.batcher import (
-    AssignResponse,
-    Batcher,
-    QueueFull,
-    ServerClosed,
-)
+from repro.serve.batcher import AssignResponse, Batcher, BatcherStats
 from repro.serve.config import ServeConfig
 from repro.serve.registry import CentroidSnapshot, ModelEntry, ModelRegistry
+from repro.serve.resilience import (
+    CircuitBreaker,
+    DeadlineExceeded,
+    InvalidRequest,
+    LaunchFault,
+    ModelUnhealthy,
+    QueueFull,
+    QuotaExceeded,
+    ServerClosed,
+    WorkerCrashed,
+)
 from repro.serve.server import Server, serve
 from repro.serve.swap import (
     CheckpointWatcher,
@@ -39,14 +52,22 @@ from repro.serve.swap import (
 __all__ = [
     "AssignResponse",
     "Batcher",
+    "BatcherStats",
     "CentroidSnapshot",
     "CheckpointWatcher",
+    "CircuitBreaker",
+    "DeadlineExceeded",
+    "InvalidRequest",
+    "LaunchFault",
     "ModelEntry",
     "ModelRegistry",
+    "ModelUnhealthy",
     "QueueFull",
+    "QuotaExceeded",
     "ServeConfig",
     "Server",
     "ServerClosed",
+    "WorkerCrashed",
     "load_centroids",
     "serve",
     "swap_from_checkpoint",

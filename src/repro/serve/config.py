@@ -51,10 +51,43 @@ class ServeConfig:
       jitted call, so autotuning/demotion/compilation all happen off the
       request path (zero recompiles once traffic starts).
 
+    Admission & resilience (see :mod:`repro.serve.resilience`):
+
+    * ``default_deadline_ms`` — per-request deadline applied when a submit
+      does not pass its own; ``None`` = requests never expire.  A request
+      whose deadline lapses while queued is *shed* with
+      :class:`repro.serve.DeadlineExceeded` before it can waste a launch
+      slot.
+    * ``validate_requests`` — reject non-finite payloads at submit time
+      with :class:`repro.serve.InvalidRequest` (a client error) instead of
+      letting a NaN poison a coalesced launch.  Per-submit ``validate=``
+      overrides it for trusted clients.
+    * ``tenant_quota`` — max *queued* requests per tenant id; beyond it
+      :class:`repro.serve.QuotaExceeded` (one noisy tenant can no longer
+      occupy the whole queue).  ``None`` = no per-tenant bound.
+    * ``launch_retries`` — how many times a launch that failed with a
+      *transient* fault is retried on the ref/demoted kernel path before
+      the batch is bisected.
+    * ``demote_after`` — consecutive primary-launch failures at one shape
+      bucket before that bucket is demoted to the ref path for the rest of
+      the process (recorded via ``kernels.ops.record_demotion``); 0 never
+      demotes.
+    * ``breaker_threshold`` — consecutive failed launches that trip the
+      per-model circuit breaker (fast-fail
+      :class:`repro.serve.ModelUnhealthy` until a half-open probe
+      succeeds); 0 disables the breaker.
+    * ``breaker_backoff_s`` / ``breaker_backoff_max_s`` — open → half-open
+      probe backoff: doubles per consecutive trip, jittered by a PRNG
+      seeded from ``(seed, trips)`` (deterministic replay).
+    * ``seed`` — seeds the breaker's probe jitter.
+
     Hot-swap:
 
     * ``poll_interval_s`` — how often a :class:`repro.serve.CheckpointWatcher`
       polls its checkpoint directory for a newer intact step.
+    * ``watcher_timeout_s`` — watchdog bound on one watcher poll (a hung
+      checkpoint load is abandoned and counted as a stalled poll instead
+      of freezing hot-swap forever); ``None`` = no watchdog.
     """
 
     max_batch: int = 4096
@@ -66,6 +99,16 @@ class ServeConfig:
     donate: str = "auto"
     warmup: bool = True
     poll_interval_s: float = 0.2
+    default_deadline_ms: float | None = None
+    validate_requests: bool = True
+    tenant_quota: int | None = None
+    launch_retries: int = 1
+    demote_after: int = 3
+    breaker_threshold: int = 5
+    breaker_backoff_s: float = 1.0
+    breaker_backoff_max_s: float = 30.0
+    seed: int = 0
+    watcher_timeout_s: float | None = 30.0
 
     def __post_init__(self):
         def _positive(name, value):
@@ -88,6 +131,31 @@ class ServeConfig:
             raise ValueError(
                 f"poll_interval_s must be positive, "
                 f"got {self.poll_interval_s!r}")
+        if self.default_deadline_ms is not None \
+                and self.default_deadline_ms <= 0:
+            raise ValueError(
+                f"default_deadline_ms must be positive or None, "
+                f"got {self.default_deadline_ms!r}")
+        if not isinstance(self.validate_requests, bool):
+            raise ValueError(
+                f"validate_requests must be a bool, "
+                f"got {self.validate_requests!r}")
+        if self.tenant_quota is not None:
+            _positive("tenant_quota", self.tenant_quota)
+        for name in ("launch_retries", "demote_after", "breaker_threshold"):
+            value = getattr(self, name)
+            if not isinstance(value, int) or isinstance(value, bool) \
+                    or value < 0:
+                raise ValueError(
+                    f"{name} must be a non-negative int, got {value!r}")
+        if self.breaker_backoff_s <= 0 or self.breaker_backoff_max_s <= 0:
+            raise ValueError("breaker backoffs must be positive")
+        if not isinstance(self.seed, int) or isinstance(self.seed, bool):
+            raise ValueError(f"seed must be an int, got {self.seed!r}")
+        if self.watcher_timeout_s is not None and self.watcher_timeout_s <= 0:
+            raise ValueError(
+                f"watcher_timeout_s must be positive or None, "
+                f"got {self.watcher_timeout_s!r}")
         if self.impl != "auto" and self.impl not in ops.IMPLS:
             raise ValueError(
                 f"unknown impl {self.impl!r}; known: ('auto',) + {ops.IMPLS}")

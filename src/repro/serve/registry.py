@@ -21,7 +21,8 @@ the serving twin of the engine's trace-event vocabulary.
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass
+import time
+from dataclasses import dataclass, field
 from typing import Any
 
 import jax
@@ -39,12 +40,14 @@ class CentroidSnapshot:
     the snapshot came from (None for directly registered arrays).  Every
     :class:`repro.serve.AssignResponse` records the (version, step) that
     served it, so clients and tests can attribute results to exactly one
-    centroid generation.
+    centroid generation.  ``t_swapped`` (monotonic seconds) is when this
+    generation went live — ``Server.health()`` reports its age.
     """
 
     centroids: Any          # [k, n] jax array
     version: int
     step: int | None
+    t_swapped: float = field(default_factory=time.monotonic, compare=False)
 
     @property
     def k(self) -> int:
@@ -82,6 +85,8 @@ class ModelEntry:
         self._recompiles = 0
         self._donate = donate
         self._assign = self._build_assign()
+        self._fallback_assign = None             # built lazily / at warmup
+        self._demoted_buckets: set[int] = set()
 
     # -- kernel dispatch ----------------------------------------------------
     def _build_assign(self):
@@ -94,16 +99,57 @@ class ModelEntry:
         donate = (0,) if self._donate else ()
         return jax.jit(_assign, donate_argnums=donate)
 
+    def _fallback(self):
+        # Ref-path launch for transient-fault retries and demoted buckets.
+        # Its own jit (never donated: a retry must be able to rebuild the
+        # buffer), its own trace counter — warming it never perturbs the
+        # primary zero-recompile contract.
+        with self._lock:
+            if self._fallback_assign is None:
+                self._fallback_assign = jax.jit(
+                    lambda q, c: ops.assign(
+                        q, c, impl="ref", precision=self.precision))
+            return self._fallback_assign
+
     def launch(self, q: jax.Array,
                snapshot: CentroidSnapshot) -> tuple[np.ndarray, np.ndarray]:
         """Run one coalesced assignment launch against ``snapshot``.
 
         The batcher calls this with the padded request buffer; it is a
         method (not an inlined jit call) so tests can wrap it to simulate
-        slow kernels without touching the queueing logic.
+        slow kernels without touching the queueing logic.  A bucket the
+        batcher demoted (repeated primary failures) routes straight to the
+        ref fallback.
         """
+        if int(q.shape[0]) in self._demoted_buckets:
+            return self.launch_fallback(q, snapshot)
         ids, d = self._assign(q, snapshot.centroids)
         return np.asarray(ids), np.asarray(d)
+
+    def launch_fallback(self, q: jax.Array,
+                        snapshot: CentroidSnapshot
+                        ) -> tuple[np.ndarray, np.ndarray]:
+        """The ref-path launch: where transient launch faults retry."""
+        ids, d = self._fallback()(q, snapshot.centroids)
+        return np.asarray(ids), np.asarray(d)
+
+    def demote_bucket(self, bucket: int, exc: Exception) -> None:
+        """Pin ``bucket`` to the ref path for this entry's lifetime, and
+        record the failure in the process-wide kernel demotion table (so
+        eager dispatches at this shape skip the Pallas path too)."""
+        self._demoted_buckets.add(int(bucket))
+        if self.impl in ("pallas", "pallas_interpret"):
+            snap = self.snapshot()
+            ops.record_demotion(
+                "assign", self.impl, (1, int(bucket), snap.k, snap.n_features),
+                self.precision, exc)
+
+    def is_demoted(self, bucket: int) -> bool:
+        return int(bucket) in self._demoted_buckets
+
+    @property
+    def demoted_buckets(self) -> tuple[int, ...]:
+        return tuple(sorted(self._demoted_buckets))
 
     def warmup(self, buckets: tuple[int, ...]) -> None:
         """Pre-pay every per-bucket cost off the request path.
@@ -122,6 +168,9 @@ class ModelEntry:
                             precision=self.precision)
             q = jax.numpy.zeros((b, n), jax.numpy.float32)
             jax.block_until_ready(self._assign(q, snap.centroids))
+            # Compile the ref fallback too: a transient launch fault must
+            # retry immediately, not pay a trace on the request path.
+            jax.block_until_ready(self._fallback()(q, snap.centroids))
 
     # -- snapshot management ------------------------------------------------
     def snapshot(self) -> CentroidSnapshot:
@@ -193,10 +242,16 @@ class ModelRegistry:
         with self._lock:
             return sorted(self._entries)
 
+    def record(self, event: tuple) -> None:
+        """Append a structured serving event to the trace (thread-safe).
+        The batcher and circuit breaker route their ``launch_fault`` /
+        ``deadline_shed`` / ``breaker_*`` / ``worker_restart`` events here."""
+        with self._lock:
+            self.trace.append(event)
+
     def swap(self, model_id: str, centroids, *,
              step: int | None = None) -> CentroidSnapshot:
         """Hot-swap ``model_id``'s centroids; logs ``("swap", id, step)``."""
         snap = self.get(model_id).swap(centroids, step=step)
-        with self._lock:
-            self.trace.append(("swap", model_id, step))
+        self.record(("swap", model_id, step))
         return snap

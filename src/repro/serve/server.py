@@ -14,9 +14,12 @@ threads.  ``repro.api.serve()`` is the facade constructor::
 """
 from __future__ import annotations
 
+import time
 from concurrent.futures import Future
+from concurrent.futures import TimeoutError as FutureTimeoutError
 
 from repro.serve.batcher import AssignResponse, Batcher
+from repro.serve.resilience import CLOSED, DeadlineExceeded
 from repro.serve.config import ServeConfig
 from repro.serve.registry import CentroidSnapshot, ModelEntry, ModelRegistry
 from repro.serve.swap import CheckpointWatcher, swap_from_checkpoint
@@ -56,7 +59,8 @@ class Server:
             donate=donate)
         if cfg.warmup if warmup is None else warmup:
             entry.warmup(cfg.buckets())
-        self._batchers[model_id] = Batcher(entry, cfg)
+        self._batchers[model_id] = Batcher(entry, cfg,
+                                           trace=self.registry.record)
         return entry
 
     def unregister(self, model_id: str) -> None:
@@ -69,24 +73,52 @@ class Server:
         return self.registry.list_models()
 
     # -- request path -------------------------------------------------------
-    def submit(self, model_id: str, points) -> Future:
-        """Enqueue a request; returns ``Future[AssignResponse]``.
-
-        Raises :class:`repro.serve.QueueFull` immediately on a saturated
-        queue (graceful rejection) and ``KeyError`` for unknown models.
-        """
+    def _batcher(self, model_id: str) -> Batcher:
         try:
-            batcher = self._batchers[model_id]
+            return self._batchers[model_id]
         except KeyError:
             raise KeyError(
                 f"unknown model {model_id!r}; registered: "
                 f"{self.models()}") from None
-        return batcher.submit(points)
+
+    def submit(self, model_id: str, points, *,
+               deadline_ms: float | None = None, tenant: str = "default",
+               validate: bool | None = None) -> Future:
+        """Enqueue a request; returns ``Future[AssignResponse]``.
+
+        Admission is fail-fast and typed: :class:`repro.serve.QueueFull` on
+        a saturated queue, :class:`repro.serve.QuotaExceeded` when
+        ``tenant`` is over its quota, :class:`repro.serve.ModelUnhealthy`
+        while the model's circuit breaker is open,
+        :class:`repro.serve.InvalidRequest` for non-finite payloads, and
+        ``KeyError`` for unknown models.  ``deadline_ms`` overrides
+        ``config.default_deadline_ms`` for this request.
+        """
+        return self._batcher(model_id).submit(
+            points, deadline_ms=deadline_ms, tenant=tenant,
+            validate=validate)
 
     def assign(self, model_id: str, points,
-               timeout: float | None = 60.0) -> AssignResponse:
-        """Synchronous convenience wrapper around :meth:`submit`."""
-        return self.submit(model_id, points).result(timeout=timeout)
+               timeout: float | None = 60.0, *,
+               deadline_ms: float | None = None, tenant: str = "default",
+               validate: bool | None = None) -> AssignResponse:
+        """Synchronous convenience wrapper around :meth:`submit`.
+
+        On ``timeout`` the queued request is *cancelled* — it will not
+        burn a launch slot later, and its latency never enters the
+        percentiles a client didn't observe — and
+        :class:`repro.serve.DeadlineExceeded` is raised.
+        """
+        batcher = self._batcher(model_id)
+        fut = batcher.submit(points, deadline_ms=deadline_ms, tenant=tenant,
+                             validate=validate)
+        try:
+            return fut.result(timeout=timeout)
+        except FutureTimeoutError:
+            batcher.cancel(fut)
+            raise DeadlineExceeded(
+                f"model {model_id!r}: assign() timed out after {timeout}s; "
+                "request cancelled") from None
 
     # -- hot-swap -----------------------------------------------------------
     def swap(self, model_id: str, centroids, *,
@@ -101,12 +133,17 @@ class Server:
                                     step=step)
 
     def watch(self, model_id: str, ckpt_dir: str, *,
-              poll_interval_s: float | None = None) -> CheckpointWatcher:
+              poll_interval_s: float | None = None,
+              poll_timeout_s: float | None = None) -> CheckpointWatcher:
         """Start a background watcher hot-swapping ``model_id`` whenever a
-        newer intact checkpoint appears under ``ckpt_dir``."""
+        newer intact checkpoint appears under ``ckpt_dir``.  Polls run
+        under the ``config.watcher_timeout_s`` watchdog (overridable here)
+        so a hung checkpoint load can never freeze hot-swap."""
         watcher = CheckpointWatcher(
             self.registry, model_id, ckpt_dir,
-            poll_interval_s=poll_interval_s or self.config.poll_interval_s)
+            poll_interval_s=poll_interval_s or self.config.poll_interval_s,
+            poll_timeout_s=(self.config.watcher_timeout_s
+                            if poll_timeout_s is None else poll_timeout_s))
         self._watchers.append(watcher)
         return watcher.start()
 
@@ -142,6 +179,41 @@ class Server:
 
     def recompiles(self, model_id: str) -> int:
         return self.registry.get(model_id).recompiles
+
+    def health(self) -> dict:
+        """One aggregated liveness/readiness snapshot of the whole server.
+
+        Per model: queue depth, circuit-breaker state, worker liveness and
+        restart count, demoted buckets, and the age of the serving
+        snapshot; plus every watcher's :meth:`CheckpointWatcher.describe`.
+        ``ok`` is True iff every breaker is closed, every worker and
+        watcher thread is alive, and no watcher poll is currently stalled.
+        """
+        now = time.monotonic()
+        models = {}
+        ok = not self._closed
+        for mid in self.models():
+            entry = self.registry.get(mid)
+            batcher = self._batchers[mid]
+            snap = entry.snapshot()
+            breaker = batcher.breaker.describe()
+            alive = batcher.worker_alive()
+            models[mid] = {
+                "queue_depth": batcher.queue_depth(),
+                "breaker": breaker,
+                "worker_alive": alive,
+                "worker_restarts": batcher.stats.worker_restarts,
+                "demoted_buckets": list(entry.demoted_buckets),
+                "version": snap.version,
+                "step": snap.step,
+                "last_swap_age_s": round(now - snap.t_swapped, 3),
+            }
+            ok = ok and alive and breaker["state"] == CLOSED
+        watchers = [w.describe() for w in self._watchers]
+        for w in watchers:
+            ok = ok and w["alive"] and not (
+                w["last_error"] or "").startswith("poll stalled")
+        return {"ok": ok, "models": models, "watchers": watchers}
 
     # -- lifecycle ----------------------------------------------------------
     def close(self, drain: bool = True) -> None:

@@ -14,6 +14,7 @@ through the swap (see :meth:`repro.serve.registry.ModelEntry.swap`).
 from __future__ import annotations
 
 import threading
+import time
 
 import jax
 import numpy as np
@@ -84,25 +85,36 @@ def swap_from_checkpoint(registry: ModelRegistry, model_id: str,
 
 
 class CheckpointWatcher:
-    """Background thread: poll a checkpoint dir, hot-swap on new steps.
+    """Supervised background thread: poll a checkpoint dir, swap new steps.
 
     The watcher only ever moves *forward* (a step newer than the last one
     it swapped in) and only through intact checkpoints, so a torn write
-    mid-poll is skipped until the next complete save.  Swap failures are
-    recorded (``last_error``) and retried next poll instead of killing the
-    thread — serving continues on the current snapshot.
+    mid-poll is skipped until the next complete save.  *Nothing* a poll
+    does can kill the thread: every exception — including one from the
+    directory scan itself — is recorded (``last_error`` / ``n_errors``)
+    and retried next interval, and with ``poll_timeout_s`` each poll runs
+    under a watchdog so a hung checkpoint load (NFS stall, torn mmap) is
+    abandoned and counted in ``stalled_polls`` instead of freezing
+    hot-swap forever.  Serving always continues on the current snapshot;
+    ``describe()`` feeds ``Server.health()``.
     """
 
     def __init__(self, registry: ModelRegistry, model_id: str,
-                 ckpt_dir: str, *, poll_interval_s: float = 0.2):
+                 ckpt_dir: str, *, poll_interval_s: float = 0.2,
+                 poll_timeout_s: float | None = 30.0):
         self.registry = registry
         self.model_id = model_id
         self.ckpt_dir = ckpt_dir
         self.poll_interval_s = poll_interval_s
+        self.poll_timeout_s = poll_timeout_s
         self.n_swaps = 0
+        self.n_errors = 0
+        self.stalled_polls = 0
         self.last_step: int | None = None
         self.last_error: str | None = None
+        self.last_poll_t: float | None = None    # monotonic, end of last poll
         self._stop = threading.Event()
+        self._pending_done: threading.Event | None = None  # abandoned poll
         self._thread = threading.Thread(
             target=self._run, name=f"swap-{model_id}", daemon=True)
 
@@ -116,15 +128,17 @@ class CheckpointWatcher:
         return self
 
     def poll_once(self) -> bool:
-        """One poll: swap if a newer intact step exists.  True on swap."""
-        step = checkpoint.latest_intact_step(self.ckpt_dir)
-        if step is None or (self.last_step is not None
-                            and step <= self.last_step):
-            return False
+        """One poll: swap if a newer intact step exists.  True on swap.
+        Never raises — any failure lands in ``last_error``/``n_errors``."""
         try:
+            step = checkpoint.latest_intact_step(self.ckpt_dir)
+            if step is None or (self.last_step is not None
+                                and step <= self.last_step):
+                return False
             swap_from_checkpoint(self.registry, self.model_id,
                                  self.ckpt_dir, step=step)
         except Exception as exc:
+            self.n_errors += 1
             self.last_error = f"{type(exc).__name__}: {exc}"
             return False
         self.last_step = step
@@ -132,10 +146,67 @@ class CheckpointWatcher:
         self.last_error = None
         return True
 
+    def _poll_guarded(self) -> None:
+        """One supervised poll cycle, with the hung-poll watchdog.
+
+        An abandoned poll keeps running on its (daemon) thread; until it
+        finishes we *skip* further polls rather than stacking a second
+        load on top of a stalled filesystem.
+        """
+        if self._pending_done is not None:
+            if not self._pending_done.is_set():
+                return                            # previous poll still hung
+            self._pending_done = None
+        if self.poll_timeout_s is None:
+            self.poll_once()
+            self.last_poll_t = time.monotonic()
+            return
+        done = threading.Event()
+
+        def _target():
+            try:
+                self.poll_once()
+            finally:
+                done.set()
+
+        t = threading.Thread(target=_target,
+                             name=f"swap-poll-{self.model_id}", daemon=True)
+        t.start()
+        if not done.wait(self.poll_timeout_s):
+            self.stalled_polls += 1
+            self.last_error = (
+                f"poll stalled past {self.poll_timeout_s}s; abandoned")
+            self._pending_done = done             # don't stack another poll
+            self.registry.record(
+                ("watcher_stall", self.model_id, self.poll_timeout_s))
+        self.last_poll_t = time.monotonic()
+
     def _run(self) -> None:
         while not self._stop.is_set():
-            self.poll_once()
+            try:
+                self._poll_guarded()
+            except Exception as exc:  # pragma: no cover — belt and braces
+                self.n_errors += 1
+                self.last_error = f"{type(exc).__name__}: {exc}"
             self._stop.wait(self.poll_interval_s)
+
+    def alive(self) -> bool:
+        return self._thread.is_alive()
+
+    def describe(self) -> dict:
+        """A JSON-safe snapshot for ``Server.health()``."""
+        return {
+            "model_id": self.model_id,
+            "ckpt_dir": self.ckpt_dir,
+            "alive": self.alive(),
+            "n_swaps": self.n_swaps,
+            "n_errors": self.n_errors,
+            "stalled_polls": self.stalled_polls,
+            "last_step": self.last_step,
+            "last_error": self.last_error,
+            "poll_age_s": (round(time.monotonic() - self.last_poll_t, 3)
+                           if self.last_poll_t is not None else None),
+        }
 
     def stop(self) -> None:
         self._stop.set()
