@@ -108,15 +108,22 @@ def _pretune(cfg: BigMeansConfig, source) -> None:
     kx, kc = jax.random.split(jax.random.PRNGKey(0))
     x = jax.random.normal(kx, (cfg.s, source.n_features), jnp.float32)
     c = jax.random.normal(kc, (cfg.k, source.n_features), jnp.float32)
+    x_full = x
     x = px.cast_storage(x, prec)
     ops.fused_step(x, c, impl=impl, precision=prec)
     ops.assign(x, c, impl=impl, precision=prec)
-    if prec == "bf16":
-        # lloyd's objective epilogue assigns with f32 contractions (see
-        # core/kmeans.py) — tune that key too, or it runs untuned defaults.
-        ops.assign(x, c, impl=impl, precision="f32")
+    if prec in ("bf16", "int8"):
+        # lloyd's objective epilogue assigns with f32 contractions on the
+        # full-width view (see core/kmeans.py) — tune that key too, or it
+        # runs untuned defaults.
+        ops.assign(x_full, c, impl=impl, precision="f32")
     if cfg.batch > 1:
-        xb = jnp.broadcast_to(x, (cfg.batch,) + x.shape)
+        if isinstance(x, px.QuantizedChunk):
+            xb = px.QuantizedChunk(
+                q=jnp.broadcast_to(x.q, (cfg.batch,) + x.q.shape),
+                scale=jnp.broadcast_to(x.scale, (cfg.batch,) + x.scale.shape))
+        else:
+            xb = jnp.broadcast_to(x, (cfg.batch,) + x.shape)
         cb = jnp.broadcast_to(c, (cfg.batch,) + c.shape)
         ops.fused_step_batched(xb, cb, impl=impl, precision=prec)
 
@@ -171,6 +178,11 @@ def fit(
 
     source = as_source(data, n_features=n_features)
     prev_tuning = None
+    from repro.kernels import autotune as _autotune
+
+    # Snapshot before any kernel work: the disk cache loads lazily on the
+    # first get_blocks lookup, which may happen inside _pretune below.
+    n_tune_events = len(_autotune.events())
     try:
         if cfg.autotune:
             # Scoped to this call (exception paths included): the tuner
@@ -200,6 +212,10 @@ def fit(
         fallbacks = _ops.kernel_demotions()[n_demotions:]
         for d in fallbacks:
             result.trace.append(("kernel_fallback", d["op"], d["error"]))
+        # Likewise for autotune-cache files that were ignored (corrupt or
+        # stale schema): never fatal, but never silent either.
+        for ev in _autotune.events()[n_tune_events:]:
+            result.trace.append(ev)
         if fallbacks:
             result.extras.setdefault("health", {})["kernel_fallbacks"] = \
                 fallbacks

@@ -34,9 +34,12 @@ class BigMeansConfig:
     * ``impl`` — kernel implementation ('auto' resolves via
       :func:`repro.kernels.ops.resolve_impl`).
     * ``precision`` — kernel-stack precision (``'auto'`` | ``'f32'`` |
-      ``'bf16'`` | ``'bf16x3'``): bf16 stores/streams chunks at half the
-      bytes and feeds bf16 operands to the MXU; accumulators, norms, the
-      objective and every ``f_best`` comparison stay f32 (see
+      ``'bf16'`` | ``'bf16x3'`` | ``'int8'``): bf16 stores/streams chunks
+      at half the bytes and feeds bf16 operands to the MXU; int8 quantizes
+      each chunk once (per-feature scales, quantized on the host by the
+      prefetch pipeline) and contracts int8 x int8 -> int32 at a quarter of
+      the f32 bytes, with f32 norm-correction terms; accumulators, norms,
+      the objective and every ``f_best`` comparison stay f32 (see
       :mod:`repro.kernels.precision`).  ``'auto'`` follows the data dtype
       (bf16 arrays keep bf16 compute, everything else f32).
     * ``autotune`` — time candidate kernel tilings once per shape and cache

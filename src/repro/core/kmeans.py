@@ -88,11 +88,27 @@ def lloyd(
     ``weights`` enables the weighted variant used by coreset / K-means||
     baselines (w_i multiplies both the objective and the centroid update).
     ``precision`` sets the chunk storage / MXU element type (bf16 halves the
-    streamed bytes); centroids, the objective and the convergence test stay
-    f32.
+    streamed bytes, int8 quarters them); centroids, the objective and the
+    convergence test stay f32.
+
+    Under ``'int8'`` the hot loop runs on the quantized chunk (``points``
+    may arrive as a pre-quantized
+    :class:`~repro.kernels.precision.QuantizedChunk` from the streaming
+    engine) while a full-width f32 view is retained for the acceptance
+    epilogue below — the same f32-contraction rule the bf16 path follows.
     """
     precision = px.resolve(precision, points.dtype)
-    points = px.cast_storage(points, precision)
+    if precision == "int8":
+        # Full-width view for the accepting objective; int8 codes for the
+        # bandwidth-bound loop.  A pre-quantized chunk dequantizes to the
+        # values the contractions actually see — the best view available.
+        points_eval = (px.dequantize(points)
+                       if isinstance(points, px.QuantizedChunk)
+                       else points.astype(jnp.float32))
+        points = px.as_quantized(points)
+    else:
+        points = px.cast_storage(points, precision)
+        points_eval = points
     init_centroids = init_centroids.astype(jnp.float32)
     k = init_centroids.shape[0]
     inf = jnp.float32(jnp.inf)
@@ -116,14 +132,17 @@ def lloyd(
     # cluster sizes and the degeneracy mask (counts are those of the *final*
     # centroids, which is what Big-means' re-seeding needs).  This objective
     # is what f_best acceptance compares, so its contractions run f32 even
-    # under bf16 storage (the upcast is exact): bf16 dots in
-    # ||x||^2 - 2x.c + ||c||^2 cancel catastrophically for points near their
-    # centroid and the clamp at 0 turns that into a one-sided low bias.
-    eval_prec = "f32" if precision == "bf16" else precision
-    ids, d = ops.assign(points, final.centroids, impl=impl,
+    # under bf16/int8 storage (on the full-width view): reduced-precision
+    # dots in ||x||^2 - 2x.c + ||c||^2 cancel catastrophically for points
+    # near their centroid and the clamp at 0 turns that into a one-sided
+    # low bias.
+    eval_prec = "f32" if precision in ("bf16", "int8") else precision
+    ids, d = ops.assign(points_eval, final.centroids, impl=impl,
                         precision=eval_prec)
-    _, counts = ops.update(points, ids, k, weights=weights, impl=impl,
-                           precision=precision)
+    upd_x, upd_prec = ((points_eval, "f32") if precision == "int8"
+                       else (points, precision))
+    _, counts = ops.update(upd_x, ids, k, weights=weights, impl=impl,
+                           precision=upd_prec)
     f = jnp.sum(d * weights) if weights is not None else jnp.sum(d)
     return KMeansResult(
         centroids=final.centroids,
@@ -155,7 +174,16 @@ def lloyd_batched(
     advances all streams per iteration.
     """
     precision = px.resolve(precision, points.dtype)
-    points = px.cast_storage(points, precision)
+    if precision == "int8":
+        # Same split as `lloyd`: quantized codes drive the loop, a
+        # full-width f32 view feeds the acceptance epilogue.
+        points_eval = (px.dequantize(points)
+                       if isinstance(points, px.QuantizedChunk)
+                       else points.astype(jnp.float32))
+        points = px.as_quantized(points)
+    else:
+        points = px.cast_storage(points, precision)
+        points_eval = points
     init_centroids = init_centroids.astype(jnp.float32)
     batch, k = init_centroids.shape[0], init_centroids.shape[1]
     inf = jnp.full((batch,), jnp.inf, jnp.float32)
@@ -184,16 +212,18 @@ def lloyd_batched(
         eff = "ref"
 
     # Same f32 objective epilogue as `lloyd` (see comment there): the
-    # accepting f(C, P) never pays bf16 cancellation.
-    eval_prec = "f32" if precision == "bf16" else precision
+    # accepting f(C, P) never pays bf16/int8 cancellation — it runs on the
+    # full-width view with f32 contractions.
+    eval_prec = "f32" if precision in ("bf16", "int8") else precision
+    upd_prec = "f32" if precision == "int8" else precision
 
     def _finalize(xc):
         x, c = xc
         ids_b, d_b = ops.assign(x, c, impl=eff, precision=eval_prec)
-        counts_b = ops.update(x, ids_b, k, impl=eff, precision=precision)[1]
+        counts_b = ops.update(x, ids_b, k, impl=eff, precision=upd_prec)[1]
         return ids_b, jnp.sum(d_b), counts_b
 
-    ids, f, counts = jax.lax.map(_finalize, (points, final.centroids))
+    ids, f, counts = jax.lax.map(_finalize, (points_eval, final.centroids))
     return KMeansResult(
         centroids=final.centroids,
         objective=f,

@@ -46,6 +46,19 @@ from repro.core.bigmeans import (
 from repro.engine import middleware as mw
 from repro.kernels import precision as px
 
+def _cast_dataset(X, precision):
+    """Dataset-level storage cast for the in-core drivers.
+
+    int8 is the exception: scales are a *chunk* property (``s[f]`` over the
+    chunk's points), so the dataset stays full-width here and each sampled
+    chunk is quantized at Lloyd entry — same semantics as the streaming
+    prefetcher, which quantizes per fetched chunk.
+    """
+    if px.resolve(precision, X.dtype) == "int8":
+        return jnp.asarray(X, jnp.float32)
+    return px.cast_storage(X, precision)
+
+
 if hasattr(jax, "shard_map"):
     _shard_map = functools.partial(jax.shard_map, check_vma=False)
 else:   # jax < 0.6: experimental API, `check_rep` instead of `check_vma`
@@ -71,7 +84,7 @@ def sequential(
     impl="auto", with_replacement=True, precision="auto",
 ):
     """Sequential Big-means over an in-core dataset.  Returns (state, traces)."""
-    X = px.cast_storage(X, precision)
+    X = _cast_dataset(X, precision)
     state = init_state(k, X.shape[1])
 
     def body(carry, key_i):
@@ -142,7 +155,7 @@ def batched_local(
     X, key, *, k, s, batch, rounds, sync_every, max_iters, tol, candidates,
     impl, with_replacement, precision="auto",
 ):
-    X = px.cast_storage(X, precision)
+    X = _cast_dataset(X, precision)
     states = broadcast_state(init_state(k, X.shape[1]), batch)
     keys = stream_keys(key, rounds, sync_every, batch)
     states, infos = stream_scan(
@@ -167,7 +180,7 @@ def batched_stream_mesh(
 ):
     ndev = mesh.shape[stream_axis]
     assert batch % ndev == 0, "stream mesh axis must divide batch"
-    X = px.cast_storage(X, precision)
+    X = _cast_dataset(X, precision)
     n = X.shape[1]
     keys = stream_keys(key, rounds, sync_every, batch)
 
@@ -286,7 +299,7 @@ def worker_sharded(
             ChunkInfo(*([P(axes[0])] * 4)),
         ),
     )
-    xd = px.cast_storage(X, precision)
+    xd = _cast_dataset(X, precision)
     return shard(xd, key)
 
 
@@ -377,7 +390,7 @@ def worker_sharded_rounds(
     W = 1
     for a in axes:
         W *= int(mesh.shape[a])
-    xd = px.cast_storage(X, precision)
+    xd = _cast_dataset(X, precision)
     n = X.shape[1]
 
     stack = mw.MiddlewareStack(middlewares or [])

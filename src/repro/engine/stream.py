@@ -25,7 +25,13 @@ Design properties (DESIGN.md §6) are unchanged from the historical runner:
   identical sample stream.
 * **pipelining** — a background thread prefetches chunks into a bounded
   queue and stages them on device; under ``precision='bf16'`` it casts on
-  the host first, halving host→device bytes.
+  the host first, halving host→device bytes, and under ``'int8'`` it
+  quantizes on the host (per-feature scales) and ships int8 codes — a
+  quarter of the f32 link bytes — dequantizing on device off the main
+  thread so downstream consumers still see a plain f32 chunk.  Double
+  buffering continues *inside* the fused kernel: the ``pipeline='dma'``
+  autotune candidate overlaps the HBM copy of point tile i+1 with compute
+  on tile i (``kernels/fused_step.py``).
 
 Two stream-state modes share the loop:
 
@@ -99,9 +105,34 @@ class _FetchFailure:
         self.attempts = attempts
 
 
+def _stage_quantized(arr):
+    """int8 host->device hand-off for the prefetch pipeline.
+
+    Quantize on the host thread (per-feature scales, the canonical scheme
+    of :mod:`repro.kernels.precision`), ship int8 codes + one f32 scale row
+    — roughly a quarter of the f32 host->device bytes — then dequantize on
+    device, still off the main thread.  The consumer sees a plain f32 chunk
+    (sanitizer, K-means++ seeding and stream slicing are untouched) whose
+    values are exactly the quantized representation; ``lloyd`` re-quantizes
+    deterministically, so results are identical to shipping f32.
+
+    Non-finite chunks ship unquantized: NaN/Inf must reach the chunk
+    sanitizer verbatim (int8 codes would silently launder them into
+    in-range garbage).
+    """
+    from repro.kernels import precision as px
+
+    if not np.isfinite(arr).all():
+        return jax.device_put(arr)
+    q, scale = px.host_quantize(arr)
+    qd = jax.device_put(q)
+    sd = jax.device_put(scale)
+    return qd.astype(jnp.float32) * sd[None, :]
+
+
 def _fetch_resilient(provider, cid, fault_injector, dtype, *,
                      retry=None, timeout=None, wait=time.sleep,
-                     aborted=None):
+                     aborted=None, stage=jax.device_put):
     """One guarded chunk fetch: watchdog + classify + bounded retry.
 
     Returns the device-staged chunk, raises :class:`EndOfStream`, or
@@ -109,7 +140,8 @@ def _fetch_resilient(provider, cid, fault_injector, dtype, *,
     class, or a transient one with the retry budget exhausted).  A hung
     provider becomes a retryable :class:`repro.engine.faults.FetchTimeout`
     via the watchdog, so the calling thread is never blocked for longer
-    than ``timeout`` per attempt.
+    than ``timeout`` per attempt.  ``stage`` is the host->device hand-off
+    (:func:`_stage_quantized` under ``precision='int8'``).
     """
 
     def attempt_once():
@@ -122,7 +154,7 @@ def _fetch_resilient(provider, cid, fault_injector, dtype, *,
         try:
             arr = faults.call_with_timeout(
                 attempt_once, timeout, name=f"fetch-watchdog-{cid}")
-            return jax.device_put(arr)
+            return stage(arr)
         except EndOfStream:
             raise
         except Exception as exc:
@@ -154,13 +186,14 @@ class _Prefetcher:
 
     def __init__(self, provider, ids, depth,
                  fault_injector=None, dtype=np.float32,
-                 retry=None, timeout=None):
+                 retry=None, timeout=None, stage=jax.device_put):
         self._provider = provider
         self._ids = ids
         self._dtype = dtype
         self._fault_injector = fault_injector
         self._retry = retry
         self._timeout = timeout
+        self._stage = stage
         self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._work, daemon=True)
@@ -171,7 +204,8 @@ class _Prefetcher:
             return _fetch_resilient(
                 self._provider, cid, self._fault_injector, self._dtype,
                 retry=self._retry, timeout=self._timeout,
-                wait=self._stop.wait, aborted=self._stop.is_set)
+                wait=self._stop.wait, aborted=self._stop.is_set,
+                stage=self._stage)
         except EndOfStream:
             return self._DONE
 
@@ -214,14 +248,14 @@ class _Prefetcher:
 
 
 def _sync_chunks(provider, ids, fault_injector, dtype=np.float32,
-                 retry=None, timeout=None):
+                 retry=None, timeout=None, stage=jax.device_put):
     """prefetch=0 fallback: fetch in the main thread (debug / determinism),
     with the same retry/watchdog semantics as the prefetch pipeline."""
     for cid in ids:
         try:
             yield cid, _fetch_resilient(
                 provider, cid, fault_injector, dtype,
-                retry=retry, timeout=timeout)
+                retry=retry, timeout=timeout, stage=stage)
         except EndOfStream:
             return
 
@@ -343,16 +377,20 @@ def run_stream(
 
     from repro.kernels import precision as px
 
-    host_dtype = px.host_dtype(getattr(cfg, "precision", "auto")) or np.float32
+    precision = getattr(cfg, "precision", "auto")
+    host_dtype = px.host_dtype(precision) or np.float32
+    # int8 ships quantized codes over the host->device link (~1/4 of the
+    # f32 bytes) and dequantizes on device, still off the main thread.
+    stage = _stage_quantized if precision == "int8" else jax.device_put
     ids = range(start_chunk, cfg.n_chunks)
     retry = faults.RetryPolicy.from_config(cfg)
     timeout = getattr(cfg, "fetch_timeout_s", None)
     source = (
         _Prefetcher(provider, ids, cfg.prefetch, fault_injector, host_dtype,
-                    retry=retry, timeout=timeout)
+                    retry=retry, timeout=timeout, stage=stage)
         if cfg.prefetch > 0
         else _sync_chunks(provider, ids, fault_injector, host_dtype,
-                          retry=retry, timeout=timeout)
+                          retry=retry, timeout=timeout, stage=stage)
     )
     kernel = _StepKernel(cfg, key, topology)
     ctx.extras["stream_mode"] = "persistent" if persistent else "fold"

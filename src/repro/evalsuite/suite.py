@@ -16,7 +16,7 @@ f(C, X) (via :func:`repro.api.evaluate`) and wall clock.
 
 Tiers: ``quick`` is the PR-gate (small-m datasets, 2 seeds, minutes on a
 2-vCPU container); ``full`` is the nightly sweep (all datasets, more
-seeds, the bf16 and competitive-scheduler cells).
+seeds, the bf16/int8 and competitive-scheduler cells).
 """
 from __future__ import annotations
 
@@ -63,6 +63,8 @@ METHODS: tuple[MethodSpec, ...] = (
     MethodSpec("bm/batched", "bigmeans", "batched", {"batch": 4}),
     MethodSpec("bm/batched-bf16", "bigmeans", "batched",
                {"batch": 4, "precision": "bf16"}, tiers=("full",)),
+    MethodSpec("bm/batched-int8", "bigmeans", "batched",
+               {"batch": 4, "precision": "int8"}, tiers=("full",)),
     MethodSpec("bm/competitive-s", "bigmeans", "streaming",
                {"batch": 4, "scheduler": "competitive_s", "sync_every": 2},
                tiers=("full",)),

@@ -38,8 +38,9 @@ from typing import Callable
 
 _DEFAULTS: dict[str, dict] = {
     "assign": {"block_m": 256, "block_k": 128, "block_f": 256},
-    "fused": {"block_m": 256},
     # None -> the kernel's shape-derived tile (see fused_step._batched_tiles)
+    "fused": {"block_m": 256, "block_k": None, "block_n": None,
+              "pipeline": "blocks"},
     "fused_batched": {"block_m": 256, "block_k": None, "block_n": None},
 }
 
@@ -50,6 +51,27 @@ _enabled: bool = os.environ.get("REPRO_AUTOTUNE", "") not in ("", "0")
 _cache_path: str | None = os.environ.get("REPRO_AUTOTUNE_CACHE") or None
 
 _WARMUP, _REPS = 1, 3
+
+# Observability: cache files that failed to load (corrupt JSON, stale or
+# unknown schema) are *ignored*, never fatal — but each ignore is recorded
+# here so drivers can surface it as a trace event instead of the cache
+# silently reverting to defaults.
+_events: list[tuple] = []
+
+
+def events() -> list[tuple]:
+    """Every cache-load anomaly this process has recorded, in order.
+
+    Entries are ``("autotune_cache_ignored", path, reason)`` for whole-file
+    rejects and ``("autotune_cache_entry_ignored", path, key)`` for
+    malformed individual entries.  ``repro.api.fit`` drains new entries into
+    the run trace.
+    """
+    return list(_events)
+
+
+def _record_event(kind: str, *info) -> None:
+    _events.append((kind,) + info)
 
 
 def enable(on: bool = True) -> None:
@@ -86,6 +108,17 @@ def cache_key(kind: str, *, backend: str, b: int, m: int, k: int, n: int,
     return f"{kind}|{backend}|b{b}|m{m}|k{k}|n{n}|{precision}"
 
 
+def _valid_entry(blocks) -> bool:
+    """A disk-cache entry ops can splat into a kernel call as kwargs."""
+    if not isinstance(blocks, dict):
+        return False
+    return all(
+        isinstance(name, str)
+        and (val is None or isinstance(val, (int, str))
+             and not isinstance(val, bool))
+        for name, val in blocks.items())
+
+
 def _load_disk() -> None:
     if not _cache_path or _cache_path in _loaded_paths:
         return
@@ -93,9 +126,24 @@ def _load_disk() -> None:
     try:
         with open(_cache_path) as f:
             data = json.load(f)
-    except (OSError, ValueError):
+    except FileNotFoundError:
+        return                          # no cache yet: the normal first run
+    except (OSError, ValueError) as exc:
+        _record_event("autotune_cache_ignored", _cache_path,
+                      f"unreadable: {type(exc).__name__}: {exc}")
         return
-    for key, blocks in data.get("entries", {}).items():
+    if not isinstance(data, dict) or not isinstance(data.get("entries"), dict):
+        _record_event("autotune_cache_ignored", _cache_path,
+                      "not a cache object")
+        return
+    if data.get("version") != 1:
+        _record_event("autotune_cache_ignored", _cache_path,
+                      f"stale schema version {data.get('version')!r}")
+        return
+    for key, blocks in data["entries"].items():
+        if not _valid_entry(blocks):
+            _record_event("autotune_cache_entry_ignored", _cache_path, key)
+            continue
         _cache.setdefault(key, blocks)
 
 
@@ -129,8 +177,24 @@ def candidates(kind: str, *, b: int, m: int, k: int, n: int,
 
     out: list[dict] = []
     if kind == "fused":
-        for bm in (128, 256, 512):
-            out.append({"block_m": bm})
+        # Shape-derived default tiling first (see fused_batched below), then
+        # lane/contraction tile variants x the two pipelines: 'blocks' (grid
+        # streaming) vs 'dma' (double-buffered explicit copies) — the tuner
+        # decides per backend whether compute/DMA overlap pays.
+        _, _, bk0, bn0 = fused._batched_tiles(k, n)
+        out.append({"block_m": 256, "block_k": bk0, "block_n": bn0,
+                    "pipeline": "blocks"})
+        for pipe in ("blocks", "dma"):
+            for bm in (128, 256, 512):
+                for bk, bn in ((bk0, bn0), (128, 256), (256, 512)):
+                    cand = {"block_m": bm, "block_k": bk, "block_n": bn,
+                            "pipeline": pipe}
+                    if cand in out:
+                        continue
+                    k_pad, n_pad, _, _ = fused._batched_tiles(k, n, bk, bn)
+                    if k_pad * n_pad > fused._MAX_KN_ELEMS:
+                        continue
+                    out.append(cand)
     elif kind == "fused_batched":
         # The shape-derived default tiling is candidate #0, so tuning can
         # never cache something slower than not tuning at all.
@@ -161,10 +225,11 @@ def candidates(kind: str, *, b: int, m: int, k: int, n: int,
                                 "block_f": bf})
     else:
         raise ValueError(f"unknown autotune kind {kind!r}")
-    # Defaults first, so ties keep historic behaviour.  For fused_batched
+    # Defaults first, so ties keep historic behaviour.  For the fused kinds
     # the "default" that must be timed first is the shape-derived tiling
     # prepended above (the _DEFAULTS entry holds unresolved Nones).
-    head = (out[0],) if kind == "fused_batched" else (_DEFAULTS[kind],)
+    head = (out[0],) if kind in ("fused", "fused_batched") \
+        else (_DEFAULTS[kind],)
     out.sort(key=lambda blk: blk not in head)
     return out
 

@@ -15,6 +15,13 @@ distances stay f32 (``preferred_element_type``), so near-tie argmins are
 decided on f32 scores.  ``'bf16x3'`` keeps f32 storage and splits each
 operand into hi/lo bf16 halves for three compensated MXU products.
 
+``'int8'`` streams the chunk as int8 codes + per-feature scales (a quarter
+of the f32 bytes), re-quantizes centroids into the chunk's scaled feature
+space with per-row scales ``t`` (so ``x.c_j ~= intdot(xq, cq_j) * t_j``),
+contracts int8 x int8 -> int32 exactly, and assembles the score with the f32
+correction terms (full-width ``||c||^2``, dequantized ``||x||^2``) — argmins
+are still decided on f32 scores.
+
 Grid: (point_tiles, centroid_tiles, feature_tiles), features innermost.
 Block sizes default to the module constants; ``repro.kernels.ops`` overrides
 them with autotuned tilings (``repro.kernels.autotune``).
@@ -86,6 +93,61 @@ def _assign_kernel(
             d_ref[...] = jnp.maximum(min_ref[...] + xsq_ref[...], 0.0)
 
 
+def _assign_kernel_q(
+    x_ref,       # [bm, bf] int8 chunk codes
+    c_ref,       # [bk, bf] int8 centroid codes (scaled feature space)
+    csq_ref,     # [1, bk]  f32 full-width ||c||^2 (padded centroids: _NEG_INIT)
+    t_ref,       # [1, bk]  f32 per-row centroid scales (padded: 0)
+    scale_ref,   # [1, bf]  f32 per-feature chunk scales (padded: 0)
+    id_ref,      # out [bm, 1] int32
+    d_ref,       # out [bm, 1] f32
+    acc_ref,     # scratch [bm, bk] int32: running integer dot (exact)
+    xsq_ref,     # scratch [bm, 1] f32: running dequantized ||x||^2
+    min_ref,     # scratch [bm, 1] f32
+    arg_ref,     # scratch [bm, 1] int32
+    *,
+    block_k: int,
+):
+    j = pl.program_id(1)
+    l = pl.program_id(2)
+    num_k = pl.num_programs(1)
+    num_f = pl.num_programs(2)
+
+    @pl.when(jnp.logical_and(j == 0, l == 0))
+    def _init_point_tile():
+        xsq_ref[...] = jnp.zeros_like(xsq_ref)
+        min_ref[...] = jnp.full_like(min_ref, _NEG_INIT)
+        arg_ref[...] = jnp.zeros_like(arg_ref)
+
+    @pl.when(l == 0)
+    def _init_k_tile():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xq = x_ref[...]
+    acc_ref[...] += px.intdot(xq, c_ref[...], (((1,), (1,)), ((), ())))
+
+    @pl.when(j == 0)
+    def _accum_xsq():
+        deq = xq.astype(jnp.float32) * scale_ref[...]
+        xsq_ref[...] += jnp.sum(deq * deq, axis=1, keepdims=True)
+
+    @pl.when(l == num_f - 1)
+    def _reduce_k_tile():
+        # score = ||c||^2 - 2 x.c with the int32 dot scaled per column by t
+        dots = acc_ref[...].astype(jnp.float32) * t_ref[...]
+        score = csq_ref[...] - 2.0 * dots                  # [bm, bk]
+        tile_min = jnp.min(score, axis=1, keepdims=True)   # [bm, 1]
+        tile_arg = jnp.argmin(score, axis=1).astype(jnp.int32)[:, None]
+        better = tile_min < min_ref[...]
+        arg_ref[...] = jnp.where(better, j * block_k + tile_arg, arg_ref[...])
+        min_ref[...] = jnp.where(better, tile_min, min_ref[...])
+
+        @pl.when(j == num_k - 1)
+        def _finalize():
+            id_ref[...] = arg_ref[...]
+            d_ref[...] = jnp.maximum(min_ref[...] + xsq_ref[...], 0.0)
+
+
 def _pad_to(a: jax.Array, size: int, axis: int, value=0.0) -> jax.Array:
     pad = size - a.shape[axis]
     if pad <= 0:
@@ -100,7 +162,7 @@ def _pad_to(a: jax.Array, size: int, axis: int, value=0.0) -> jax.Array:
     static_argnames=("block_m", "block_k", "block_f", "precision", "interpret"),
 )
 def assign_pallas(
-    x: jax.Array,
+    x,
     c: jax.Array,
     *,
     block_m: int = 256,
@@ -109,11 +171,19 @@ def assign_pallas(
     precision: str = "f32",
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
-    """Pallas nearest-centroid assignment.  x [m,n], c [k,n] -> (ids, sqdist)."""
+    """Pallas nearest-centroid assignment.  x [m,n], c [k,n] -> (ids, sqdist).
+
+    ``x`` may be a plain array or (for ``precision='int8'``) a pre-quantized
+    :class:`~repro.kernels.precision.QuantizedChunk`; plain arrays are
+    quantized here with the canonical per-feature scheme.
+    """
+    px.check(precision)
+    if precision == "int8" or isinstance(x, px.QuantizedChunk):
+        return _assign_pallas_q(x, c, block_m=block_m, block_k=block_k,
+                                block_f=block_f, interpret=interpret)
     m, n = x.shape
     k, n2 = c.shape
     assert n == n2, (x.shape, c.shape)
-    px.check(precision)
     # ||c||^2 in f32 from the full-width view, *before* any storage cast.
     csq = px.sqnorm(c)
     store = px.storage_dtype(precision)
@@ -155,4 +225,62 @@ def assign_pallas(
         ],
         interpret=interpret,
     )(xp, cp, csqp)
+    return ids[:m, 0], d[:m, 0]
+
+
+def _assign_pallas_q(
+    x,
+    c: jax.Array,
+    *,
+    block_m: int,
+    block_k: int,
+    block_f: int,
+    interpret: bool,
+) -> tuple[jax.Array, jax.Array]:
+    """int8 variant of :func:`assign_pallas` (traced inline under its jit)."""
+    qx = px.as_quantized(x)
+    m, n = qx.q.shape
+    k, n2 = c.shape
+    assert n == n2, (qx.q.shape, c.shape)
+    csq = px.sqnorm(c)                       # full-width correction term
+    cq, t = px.quantize_centroids(c, qx.scale)
+
+    block_m = min(block_m, max(8, m))
+    bm = -(-m // block_m) * block_m
+    bk = -(-k // block_k) * block_k
+    bf = -(-n // block_f) * block_f
+
+    xp = _pad_to(_pad_to(qx.q, bm, 0), bf, 1)
+    cp = _pad_to(_pad_to(cq, bk, 0), bf, 1)
+    csqp = _pad_to(csq[None, :], bk, 1, value=_NEG_INIT)   # padded c never wins
+    tp = _pad_to(t[None, :], bk, 1)
+    scalep = _pad_to(qx.scale[None, :], bf, 1)
+
+    grid = (bm // block_m, bk // block_k, bf // block_f)
+    ids, d = pl.pallas_call(
+        functools.partial(_assign_kernel_q, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_f), lambda i, j, l: (i, l)),
+            pl.BlockSpec((block_k, block_f), lambda i, j, l: (j, l)),
+            pl.BlockSpec((1, block_k), lambda i, j, l: (0, j)),
+            pl.BlockSpec((1, block_k), lambda i, j, l: (0, j)),
+            pl.BlockSpec((1, block_f), lambda i, j, l: (0, l)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, 1), lambda i, j, l: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i, j, l: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bm, 1), jnp.int32),
+            jax.ShapeDtypeStruct((bm, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_k), jnp.int32),
+            pltpu.VMEM((block_m, 1), jnp.float32),
+            pltpu.VMEM((block_m, 1), jnp.float32),
+            pltpu.VMEM((block_m, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xp, cp, csqp, tp, scalep)
     return ids[:m, 0], d[:m, 0]

@@ -14,10 +14,14 @@ there in interpret mode, which we reserve for tests).  Every wrapper accepts
                             [m,k] distance-matrix working set for big m)
 
 Every wrapper also takes ``precision`` (``'auto'`` | ``'f32'`` | ``'bf16'``
-| ``'bf16x3'``, see :mod:`repro.kernels.precision`): the storage/MXU element
-type of the point stream (``'auto'`` follows the data dtype).  Accumulators,
-norms and the objective are always f32, so the knob trades bytes/FLOP
-precision without touching acceptance semantics.
+| ``'bf16x3'`` | ``'int8'``, see :mod:`repro.kernels.precision`): the
+storage/MXU element type of the point stream (``'auto'`` follows the data
+dtype).  Accumulators, norms and the objective are always f32, so the knob
+trades bytes/FLOP precision without touching acceptance semantics.  Under
+``'int8'`` the chunk argument may be a pre-quantized
+:class:`~repro.kernels.precision.QuantizedChunk` (int8 codes + per-feature
+scales — what the streaming engine ships); plain arrays are quantized at
+kernel entry with the same deterministic scheme.
 
 Pallas launches consult :mod:`repro.kernels.autotune` for their tile sizes
 (keyed by backend, batch, shape and precision) instead of hardcoded module
@@ -151,7 +155,8 @@ def _bench(x, factory):
     defaults; eager warm-up (``repro.api.fit`` pre-tunes with concrete
     arrays) is what populates the cache.
     """
-    return None if isinstance(x, jax.core.Tracer) else factory
+    arr = x.q if isinstance(x, px.QuantizedChunk) else x
+    return None if isinstance(arr, jax.core.Tracer) else factory
 
 
 def assign(

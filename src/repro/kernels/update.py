@@ -14,6 +14,11 @@ Mixed precision (``precision='bf16'``): the point stream is read as bf16
 (half the HBM bytes) and the membership contraction runs bf16 on the MXU —
 one-hot entries are 0/1, exactly representable — while sums and counts
 accumulate f32.
+
+``'int8'``: the point stream is int8 codes (a quarter of the f32 bytes) and
+the one-hot — 0/1, int8-exact — contracts against the codes in int32, which
+is *exact*; the int32 sums are scaled by the per-feature chunk scales after
+the kernel.  Counts accumulate f32 as usual.
 """
 from __future__ import annotations
 
@@ -59,6 +64,39 @@ def _update_kernel(
         counts_ref[...] += jnp.sum(onehot, axis=0, keepdims=True)
 
 
+def _update_kernel_q(
+    x_ref,        # [bm, bf] int8 chunk codes
+    ids_ref,      # [bm, 1] int32 (padding rows hold -1)
+    sums_ref,     # out [bk, bf] int32 (exact; scaled to f32 by the wrapper)
+    counts_ref,   # out [1, bk] f32
+    *,
+    block_k: int,
+):
+    j = pl.program_id(0)   # centroid tile
+    l = pl.program_id(1)   # feature tile
+    i = pl.program_id(2)   # point tile
+
+    @pl.when(i == 0)
+    def _zero_out():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+
+        @pl.when(l == 0)
+        def _zero_counts():
+            counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    ids = ids_ref[...]                                       # [bm, 1]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (ids.shape[0], block_k), 1)
+    hit = ids == j * block_k + lane                          # [bm, bk]
+    onehot = hit.astype(jnp.int8)
+
+    sums_ref[...] += px.intdot(onehot, x_ref[...], (((0,), (0,)), ((), ())))
+
+    @pl.when(l == 0)
+    def _accum_counts():
+        counts_ref[...] += jnp.sum(
+            hit.astype(jnp.float32), axis=0, keepdims=True)
+
+
 def _pad_to(a, size, axis, value=0):
     pad = size - a.shape[axis]
     if pad <= 0:
@@ -74,7 +112,7 @@ def _pad_to(a, size, axis, value=0):
                      "interpret"),
 )
 def update_pallas(
-    x: jax.Array,
+    x,
     ids: jax.Array,
     k: int,
     *,
@@ -85,8 +123,11 @@ def update_pallas(
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """x [m,n], ids [m] int32 -> (sums f32 [k,n], counts f32 [k])."""
-    m, n = x.shape
     px.check(precision)
+    if precision == "int8" or isinstance(x, px.QuantizedChunk):
+        return _update_pallas_q(x, ids, k, block_m=block_m, block_k=block_k,
+                                block_f=block_f, interpret=interpret)
+    m, n = x.shape
     x = x.astype(px.storage_dtype(precision))
     ids = ids.astype(jnp.int32)
 
@@ -118,3 +159,49 @@ def update_pallas(
         interpret=interpret,
     )(xp, idsp)
     return sums[:k, :n], counts[0, :k]
+
+
+def _update_pallas_q(
+    x,
+    ids: jax.Array,
+    k: int,
+    *,
+    block_m: int,
+    block_k: int,
+    block_f: int,
+    interpret: bool,
+) -> tuple[jax.Array, jax.Array]:
+    """int8 variant of :func:`update_pallas` (traced inline under its jit)."""
+    qx = px.as_quantized(x)
+    m, n = qx.q.shape
+    ids = ids.astype(jnp.int32)
+
+    block_m = min(block_m, max(8, m))
+    bm = -(-m // block_m) * block_m
+    bk = -(-k // block_k) * block_k
+    bf = -(-n // block_f) * block_f
+
+    xp = _pad_to(_pad_to(qx.q, bm, 0), bf, 1)
+    idsp = _pad_to(ids[:, None], bm, 0, value=-1)            # padding never hits
+
+    grid = (bk // block_k, bf // block_f, bm // block_m)
+    sums, counts = pl.pallas_call(
+        functools.partial(_update_kernel_q, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_f), lambda j, l, i: (i, l)),
+            pl.BlockSpec((block_m, 1), lambda j, l, i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_k, block_f), lambda j, l, i: (j, l)),
+            pl.BlockSpec((1, block_k), lambda j, l, i: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bk, bf), jnp.int32),
+            jax.ShapeDtypeStruct((1, bk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, idsp)
+    # Exact int32 sums in the scaled space -> f32 sums in data space.
+    sums_f = sums[:k, :n].astype(jnp.float32) * qx.scale[None, :]
+    return sums_f, counts[0, :k]

@@ -26,7 +26,8 @@ from repro.core.kmeanspp import seed, seed_batched
 from repro.data.synthetic import GMMSpec, gmm_dataset
 from repro.kernels import ops
 from repro.kernels.fused_step import (
-    fits, fits_batched, fused_step_batched_pallas,
+    LEGACY_MAX_K, LEGACY_MAX_N, MAX_K, MAX_N, fits, fits_batched,
+    fused_step_batched_pallas,
 )
 
 X = gmm_dataset(GMMSpec(m=8000, n=8, components=5, seed=21))
@@ -95,8 +96,12 @@ def test_batched_fused_kernel_matches_two_pass(B, m, n, k):
     x = jax.random.normal(kx, (B, m, n))
     c = jax.random.normal(kc, (B, k, n))
     assert fits_batched(k, n)
-    if k > 128 or n > 1024:
-        assert not fits(k, n)        # genuinely beyond the old envelope
+    if k > LEGACY_MAX_K or n > LEGACY_MAX_N:
+        # Beyond the historical single-chunk envelope — the k-tiled argmin
+        # rewrite widened fits() to cover these shapes in one kernel too.
+        assert fits(k, n)
+    assert not fits(MAX_K + 1, n)        # the widened wall still exists
+    assert not fits(k, MAX_N + 1)
     s_p, n_p, o_p = fused_step_batched_pallas(x, c, interpret=True)
     s_r, n_r, o_r = ops._fused_step_batched_ref(x, c)
     np.testing.assert_allclose(np.asarray(n_p), np.asarray(n_r), atol=0)

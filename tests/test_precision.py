@@ -10,6 +10,21 @@ Covers the ISSUE 3 acceptance matrix:
 * autotuner: tile choice never changes numerics; on-disk cache write +
   reload round-trip; ops consults the tuner under ``pallas_interpret``.
 * ``ops.fused_step`` two-pass fallback honors ``impl='ref_chunked'``.
+
+And the ISSUE 9 kernel-depth matrix:
+
+* int8 numerics: bitwise ref-vs-Pallas parity on integer data; padding
+  invariance; ``fit(..., precision='int8')`` within 1% of f32 on the
+  evalsuite quick datasets; ``warm_assign`` demotes the int8 serving
+  shape under injected kernel failure.
+* k > 128 argmin tiling: a k=256 shape (legacy envelope miss) runs the
+  single fused kernel and matches the two-pass oracle; the autotuner's
+  candidate set covers it.
+* double-buffered DMA pipeline: 'dma' matches 'blocks' bitwise on
+  integer data and both are autotune candidates.
+* committed profile round-trip: ``results/autotune/interpret.json``
+  loads, is consulted by ops, and corrupt / stale-schema cache files are
+  ignored with a recorded event instead of crashing.
 """
 import jax
 import jax.numpy as jnp
@@ -264,7 +279,8 @@ def test_autotune_disabled_returns_defaults(clean_autotune):
     blocks = autotune.get_blocks(
         "fused", lambda blk: (lambda: None),
         backend="interpret", b=1, m=256, k=25, n=20, precision="f32")
-    assert blocks == {"block_m": 256}
+    assert blocks == {"block_m": 256, "block_k": None, "block_n": None,
+                      "pipeline": "blocks"}
 
 
 def test_autotune_cache_roundtrip(tmp_path, clean_autotune):
@@ -323,3 +339,293 @@ def test_autotune_smoke_via_ops_interpret(clean_autotune):
     np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_r),
                                rtol=1e-2, atol=1e-2)
     np.testing.assert_allclose(float(o_p), float(o_r), rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# int8 numerics (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+def _int8_exact_blobs(m=300, n=24, k=25, seed=0):
+    """Integer data on which int8 quantization is *exact*.
+
+    One point row of +/-127 pins every per-feature scale to exactly 1
+    (``s[f] = max|x[:, f]| / 127``); a 127 column in the centroids pins
+    every per-row scale ``t[j]`` to 1.  Codes then reproduce the values
+    bit-for-bit and every contraction/accumulation stays on integers below
+    2^24, so ref-vs-Pallas comparisons are bitwise whatever the tiling.
+    """
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-8, 9, size=(m, n)).astype(np.float32)
+    x[0, :] = 127.0
+    x[1, :] = -127.0
+    c = rng.integers(-8, 9, size=(k, n)).astype(np.float32)
+    c[:, 0] = 127.0
+    return jnp.asarray(x), jnp.asarray(c)
+
+
+def test_int8_precision_policy():
+    assert px.check("int8") == "int8"
+    assert px.storage_dtype("int8") == jnp.int8
+    assert px.resolve("auto", jnp.int8) == "int8"
+    qx = px.cast_storage(jnp.ones((4, 3)), "int8")
+    assert isinstance(qx, px.QuantizedChunk)
+    assert px.cast_storage(qx, "int8") is qx               # idempotent
+
+
+def test_int8_quantization_exact_on_pinned_data():
+    x, _ = _int8_exact_blobs()
+    qx = px.quantize_chunk(x)
+    np.testing.assert_array_equal(np.asarray(qx.scale),
+                                  np.ones(x.shape[1], np.float32))
+    np.testing.assert_array_equal(np.asarray(px.dequantize(qx)),
+                                  np.asarray(x))
+    # host-thread quantization is the bitwise twin of the device path
+    qh, sh = px.host_quantize(np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(qx.q), qh)
+    np.testing.assert_array_equal(np.asarray(qx.scale), sh)
+
+
+@pytest.mark.parametrize("pipeline", ["blocks", "dma"])
+def test_int8_fused_pallas_bitwise_matches_ref(pipeline):
+    """Acceptance: ref-vs-Pallas parity on integer data is *bitwise* —
+    int8 contractions are exact int32 and every f32 value is an integer
+    below 2^24, so any tiling- or pipeline-dependent difference in the
+    quantized math fails loudly, on both pipelines."""
+    x, c = _int8_exact_blobs()
+    s_r, n_r, o_r = ops.fused_step(x, c, impl="ref", precision="int8")
+    for bm in (128, 256):
+        s_p, n_p, o_p = fused_step_pallas(
+            x, c, precision="int8", block_m=bm, pipeline=pipeline,
+            interpret=True)
+        np.testing.assert_array_equal(np.asarray(s_p), np.asarray(s_r))
+        np.testing.assert_array_equal(np.asarray(n_p), np.asarray(n_r))
+        assert float(o_p) == float(o_r), (bm, pipeline)
+    # a pre-quantized chunk (what the streaming prefetcher ships) is the
+    # same computation as quantize-at-entry
+    s_q, n_q, o_q = fused_step_pallas(
+        px.quantize_chunk(x), c, pipeline=pipeline, interpret=True)
+    np.testing.assert_array_equal(np.asarray(s_q), np.asarray(s_r))
+    assert float(o_q) == float(o_r)
+
+
+@pytest.mark.parametrize("m,n,k", [(257, 29, 5), (100, 30, 129)])
+def test_int8_assign_parity_and_padding_invariance(m, n, k):
+    """Padded lanes never win an argmin; zero-padded features change
+    nothing (their quantization scale floors, codes stay 0)."""
+    x, c = _int8_exact_blobs(m, n, k, seed=3)
+    ids_p, d_p = ops.assign(x, c, impl="pallas_interpret", precision="int8")
+    ids_r, d_r = ref.assign_ref(x, c, precision="int8")
+    assert int(jnp.max(ids_p)) < k and int(jnp.min(ids_p)) >= 0
+    np.testing.assert_array_equal(np.asarray(ids_p), np.asarray(ids_r))
+    np.testing.assert_array_equal(np.asarray(d_p), np.asarray(d_r))
+    # same data embedded in a wider zero-padded feature space: identical
+    xw = jnp.pad(x, ((0, 0), (0, 7)))
+    cw = jnp.pad(c, ((0, 0), (0, 7)))
+    ids_w, d_w = ops.assign(xw, cw, impl="pallas_interpret",
+                            precision="int8")
+    np.testing.assert_array_equal(np.asarray(ids_w), np.asarray(ids_r))
+    np.testing.assert_array_equal(np.asarray(d_w), np.asarray(d_r))
+
+
+@pytest.mark.parametrize("dataset", ["hepmass-16k", "road3d-24k"])
+def test_fit_int8_within_1pct_of_f32_on_quick_datasets(dataset):
+    """Acceptance: <1% relative f_best drift vs the f32 run, same seeds,
+    on the evalsuite quick-tier datasets (real registry memmaps, reduced
+    chunk budget to keep tier-1 wall time down)."""
+    from repro.api import BigMeansConfig, fit
+    from repro.evalsuite import datasets as ds
+
+    spec = ds.get_dataset(dataset)
+    src = ds.source(spec)
+    cfg = BigMeansConfig(k=spec.k, s=spec.s, n_chunks=8, impl="ref", seed=0)
+    r32 = fit(src, cfg)
+    r8 = fit(src, cfg, precision="int8")
+    rel = abs(r8.objective - r32.objective) / r32.objective
+    assert rel < 0.01, (dataset, r32.objective, r8.objective, rel)
+
+
+@pytest.fixture
+def clean_demotions():
+    ops.reset_kernel_demotions()
+    yield
+    ops.reset_kernel_demotions()
+
+
+def test_warm_assign_int8_demotes_under_kernel_failure(clean_demotions):
+    """A Pallas failure on the int8 serving shape demotes exactly that
+    (shape, precision) key during warmup and serving falls back to ref."""
+    from repro.engine import faults
+
+    with faults.kernel_failure("assign"):
+        got = ops.warm_assign(32, 256, 16, impl="pallas_interpret",
+                              precision="int8")
+    assert got == "ref"
+    demos = [d for d in ops.kernel_demotions()
+             if d["op"] == "assign" and d["shape"] == (1, 32, 256, 16)
+             and d["precision"] == "int8"]
+    assert demos, ops.kernel_demotions()
+    # the demoted shape serves bitwise-correct results through the ref path
+    x, c = _int8_exact_blobs(32, 16, 256, seed=5)
+    ids, d = ops.assign(x, c, impl="pallas_interpret", precision="int8")
+    ids_r, d_r = ref.assign_ref(x, c, precision="int8")
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids_r))
+
+
+# ---------------------------------------------------------------------------
+# k > 128 argmin tiling + DMA pipeline (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+def test_k256_runs_single_fused_kernel_matches_oracle():
+    """Acceptance: a k=256 shape that the legacy envelope (k <= 128) sent
+    to the two-pass fallback now runs the single fused kernel, bitwise
+    equal to the oracle on integer data, on both pipelines."""
+    from repro.kernels.fused_step import LEGACY_MAX_K, fits
+
+    k, n = 256, 20
+    assert k > LEGACY_MAX_K and fits(k, n)
+    x, c = _int8_exact_blobs(m=200, n=n, k=k, seed=7)
+    s_r, n_r, o_r = ops.fused_step(x, c, impl="ref", precision="f32")
+    for pipeline in ("blocks", "dma"):
+        s_p, n_p, o_p = fused_step_pallas(x, c, precision="f32",
+                                          pipeline=pipeline, interpret=True)
+        np.testing.assert_array_equal(np.asarray(s_p), np.asarray(s_r))
+        np.testing.assert_array_equal(np.asarray(n_p), np.asarray(n_r))
+        assert float(o_p) == float(o_r), pipeline
+
+
+def test_autotune_candidates_cover_k256_and_dma(clean_autotune):
+    """The tuner's fused candidate set covers the widened envelope: the
+    k=256 cell gets real candidates, both pipelines are timed, and the
+    shape-derived 'blocks' default stays first (ties keep history)."""
+    cands = autotune.candidates("fused", b=1, m=4096, k=256, n=20,
+                                precision="f32")
+    assert cands[0]["pipeline"] == "blocks"
+    assert any(c["pipeline"] == "dma" for c in cands)
+    from repro.kernels import fused_step as fused
+    for c in cands:
+        k_pad, n_pad, _, _ = fused._batched_tiles(
+            256, 20, c["block_k"], c["block_n"])
+        assert k_pad * n_pad <= fused._MAX_KN_ELEMS, c
+
+
+def test_unknown_pipeline_rejected():
+    x, c = _int8_exact_blobs(m=64, n=8, k=4)
+    with pytest.raises(ValueError, match="unknown pipeline"):
+        fused_step_pallas(x, c, pipeline="prefetch", interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# committed autotune profile + cache observability (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+_PROFILE = __import__("pathlib").Path(__file__).resolve().parent.parent \
+    / "results" / "autotune" / "interpret.json"
+
+
+def test_committed_profile_loads_and_is_consulted(clean_autotune):
+    """Every entry in the committed per-backend profile round-trips: the
+    lazy disk load accepts the file, get_blocks serves each key without
+    re-timing (the bench spy must never run), and no load anomaly event
+    is recorded."""
+    import json
+
+    data = json.loads(_PROFILE.read_text())
+    assert data["version"] == 1 and data["entries"]
+    autotune.set_cache_path(_PROFILE)
+    autotune.enable(True)
+    n_events = len(autotune.events())
+
+    timed = []
+
+    def bench_factory(blocks):
+        return lambda: timed.append(dict(blocks))
+
+    for key, entry in data["entries"].items():
+        kind, backend, b, m, k, n, prec = key.split("|")
+        got = autotune.get_blocks(
+            kind, bench_factory, backend=backend, b=int(b[1:]),
+            m=int(m[1:]), k=int(k[1:]), n=int(n[1:]), precision=prec)
+        assert got == entry, key
+    assert timed == [], "profile hits must not re-time candidates"
+    assert autotune.events()[n_events:] == []
+
+
+def test_corrupt_cache_ignored_with_event(tmp_path, clean_autotune):
+    cache = tmp_path / "tune.json"
+    cache.write_text("{this is not json")
+    autotune.set_cache_path(cache)
+    autotune.enable(True)
+    n_events = len(autotune.events())
+    blocks = autotune.get_blocks(
+        "fused", None, backend="interpret", b=1, m=64, k=5, n=8,
+        precision="f32")
+    assert blocks == {"block_m": 256, "block_k": None, "block_n": None,
+                      "pipeline": "blocks"}
+    new = autotune.events()[n_events:]
+    assert len(new) == 1
+    kind, path, reason = new[0]
+    assert kind == "autotune_cache_ignored"
+    assert path == str(cache)
+    assert reason.startswith("unreadable")
+
+
+def test_stale_schema_cache_ignored_with_event(tmp_path, clean_autotune):
+    import json
+
+    cache = tmp_path / "tune.json"
+    cache.write_text(json.dumps({"version": 99, "entries": {}}))
+    autotune.set_cache_path(cache)
+    n_events = len(autotune.events())
+    autotune.get_blocks("fused", None, backend="interpret", b=1, m=64,
+                        k=5, n=8, precision="f32")
+    new = autotune.events()[n_events:]
+    assert new == [("autotune_cache_ignored", str(cache),
+                    "stale schema version 99")]
+
+
+def test_malformed_cache_entry_ignored_with_event(tmp_path, clean_autotune):
+    """One bad entry is skipped (with an event); good entries still load."""
+    import json
+
+    good_key = autotune.cache_key("fused", backend="interpret", b=1, m=64,
+                                  k=5, n=8, precision="f32")
+    bad_key = autotune.cache_key("fused", backend="interpret", b=1, m=64,
+                                 k=5, n=8, precision="bf16")
+    good = {"block_m": 128, "block_k": 128, "block_n": 256,
+            "pipeline": "dma"}
+    cache = tmp_path / "tune.json"
+    cache.write_text(json.dumps({
+        "version": 1,
+        "entries": {good_key: good, bad_key: {"block_m": [128]}}}))
+    autotune.set_cache_path(cache)
+    n_events = len(autotune.events())
+    got = autotune.get_blocks("fused", None, backend="interpret", b=1,
+                              m=64, k=5, n=8, precision="f32")
+    assert got == good
+    assert autotune.events()[n_events:] == [
+        ("autotune_cache_entry_ignored", str(cache), bad_key)]
+
+
+def test_fit_surfaces_cache_ignored_event_in_trace(tmp_path, clean_autotune):
+    """End-to-end observability: a corrupt on-disk cache consulted during
+    fit()'s pre-tune lands in the run trace instead of crashing (or being
+    silently swallowed)."""
+    from repro.api import BigMeansConfig, fit
+
+    cache = tmp_path / "tune.json"
+    cache.write_text("%% corrupt %%")
+    autotune.set_cache_path(cache)
+    rng = np.random.default_rng(3)
+    # an unusual shape: block sizes are read at trace time, so a shape any
+    # other test already jitted would skip get_blocks (and the lazy load)
+    X = rng.normal(size=(4_200, 9)).astype(np.float32)
+    cfg = BigMeansConfig(k=7, s=600, n_chunks=2, impl="pallas_interpret",
+                         seed=0)
+    res = fit(X, cfg)
+    assert np.isfinite(res.objective)
+    evs = [t for t in res.trace
+           if isinstance(t, tuple) and isinstance(t[0], str)
+           and t[0] == "autotune_cache_ignored"]
+    assert evs and evs[0][1] == str(cache), res.trace[-5:]
