@@ -103,8 +103,7 @@ def _measure(run, rounds, chunks, reps):
 
 
 def bench(total_chunks: int, reps: int, max_iters: int):
-    from repro.api import BigMeansConfig, fit, synthetic
-    from repro.launch.mesh import make_mesh
+    from repro.api import BigMeansConfig, TopologySpec, fit, synthetic
 
     X = synthetic.gmm_dataset(
         synthetic.GMMSpec(m=200_000, n=N, components=K, seed=12))
@@ -112,11 +111,11 @@ def bench(total_chunks: int, reps: int, max_iters: int):
     ndev = len(jax.devices())
     rows = []
 
-    def variant(batch, mesh, label):
+    def variant(batch, topology, label):
         rounds = max(2, total_chunks // batch)
         cfg = BigMeansConfig(
             k=K, s=S, batch=batch, n_chunks=rounds * batch,
-            max_iters=max_iters, impl="ref", mesh=mesh)
+            max_iters=max_iters, impl="ref", topology=topology)
 
         def run(r):
             res = fit(X, cfg, method="batched", key=key,
@@ -136,11 +135,12 @@ def bench(total_chunks: int, reps: int, max_iters: int):
               f"f_best={res.objective:.4e}", flush=True)
 
     for batch in BATCHES:
-        variant(batch, None, "local")
+        variant(batch, "single", "local")
     if ndev >= 2:
-        mesh = make_mesh((ndev,), ("streams",))
+        spec = TopologySpec(kind="stream_mesh", devices=ndev,
+                            axes=("streams",))
         batch = max(b for b in BATCHES if b % ndev == 0)
-        variant(batch, mesh, f"streams-mesh[{ndev}]")
+        variant(batch, spec, f"streams-mesh[{ndev}]")
 
     base = rows[0]["chunks_per_s"]
     for r in rows:

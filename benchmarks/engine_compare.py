@@ -31,7 +31,7 @@ import time
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def main(fast: bool = False):
+def main(fast: bool = False, topology: str = "single"):
     from repro.api import BigMeansConfig, evaluate, fit
     from repro.data.synthetic import GMMSpec, gmm_dataset
 
@@ -76,14 +76,14 @@ def main(fast: bool = False):
     for s in ladder:
         cfg = BigMeansConfig(k=k, s=s, n_chunks=n_chunks, batch=batch,
                              sync_every=2, impl="ref", seed=3,
-                             log_every=0)
+                             log_every=0, topology=topology)
         run(f"fixed_s={s}", cfg)
 
     # the race over the same ladder, same budget
     cfg = BigMeansConfig(k=k, s=s_mid, n_chunks=n_chunks, batch=batch,
                          sync_every=2, scheduler="competitive_s",
                          competitive_ladder=ladder, impl="ref", seed=3,
-                         log_every=0)
+                         log_every=0, topology=topology)
     run("competitive_s", cfg)
 
     best_fixed = min(r["f_full_per_point"] for r in rows[:-1])
@@ -126,5 +126,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller dataset / budget (CI smoke)")
+    ap.add_argument("--topology", default="single",
+                    choices=["single", "stream_mesh", "host_mesh", "auto"],
+                    help="declarative execution placement (BigMeansConfig"
+                         ".topology); host_mesh expects the REPRO_* "
+                         "bootstrap env vars")
     args = ap.parse_args()
-    main(fast=args.fast)
+    main(fast=args.fast, topology=args.topology)

@@ -24,6 +24,11 @@ def main():
     ap.add_argument("--chunks", type=int, default=300)
     ap.add_argument("--k", type=int, default=25)
     ap.add_argument("--s", type=int, default=8192, help="chunk size")
+    ap.add_argument("--topology", default="auto",
+                    choices=["auto", "single", "stream_mesh", "host_mesh"],
+                    help="declarative placement spec; host_mesh reads the "
+                         "REPRO_COORD/REPRO_NUM_HOSTS/REPRO_HOST_RANK env "
+                         "vars set by the multi-process launcher")
     args = ap.parse_args()
 
     def provider(chunk_id: int) -> np.ndarray:
@@ -33,7 +38,7 @@ def main():
     ckpt = os.path.join(tempfile.gettempdir(), "bigmeans_demo_ckpt")
     shutil.rmtree(ckpt, ignore_errors=True)      # deterministic demo reruns
     cfg = BigMeansConfig(
-        k=args.k, s=args.s, n_chunks=args.chunks,
+        k=args.k, s=args.s, n_chunks=args.chunks, topology=args.topology,
         ckpt_dir=ckpt, ckpt_every=50, log_every=25, seed=0)
 
     print(f"phase 1: clustering {args.chunks // 2} chunks, then 'crashing'…")

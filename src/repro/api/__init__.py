@@ -43,6 +43,10 @@ from repro.api.strategies import (
 )
 from repro.cluster.runner import EndOfStream
 
+# The declarative execution-placement spec (BigMeansConfig.topology) is part
+# of the public fitting surface.
+from repro.engine.topology import TopologySpec
+
 # Synthetic-data helpers re-exported so examples and smoke tests can run off
 # `repro.api` imports alone.
 from repro.data import synthetic as synthetic
@@ -75,6 +79,7 @@ __all__ = [
     "serve",
     "ServeConfig",
     "Server",
+    "TopologySpec",
     "sources",
     "strategies",
     "synthetic",
@@ -175,6 +180,15 @@ def fit(
         cfg = BigMeansConfig(**overrides)
     else:
         cfg = config.replace(**overrides) if overrides else config
+
+    from repro.engine import topology as topo_lib
+
+    if topo_lib.requested_kind(cfg) == "host_mesh":
+        # jax.distributed.initialize() must run before the first JAX
+        # computation in the process (the PRNG key below already is one),
+        # so multi-host configs bootstrap the process group here.
+        # Idempotent: resolve() reuses an already-initialized group.
+        topo_lib.resolve(cfg.topology)
 
     source = as_source(data, n_features=n_features)
     prev_tuning = None

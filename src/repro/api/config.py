@@ -63,9 +63,17 @@ class BigMeansConfig:
       (arXiv:2403.18766; see :mod:`repro.engine.scheduler`).
     * ``competitive_ladder`` — the sample sizes ``competitive_s`` races;
       empty = a geometric ladder around ``s``.
-    * ``mesh`` / ``mesh_axes`` / ``stream_axis`` — optional device mesh for
-      the sharded / stream-mesh drivers (with the streaming strategy, the
-      prefetcher feeds device-sharded chunk stacks over this mesh).
+    * ``topology`` — the declarative execution-placement spec: a kind name
+      (``'auto'`` | ``'single'`` | ``'stream_mesh'`` | ``'worker_mesh'`` |
+      ``'host_mesh'``) or a full :class:`repro.engine.topology.TopologySpec`
+      (device counts/shapes, axis names, multi-host fields).  This is the
+      ONE way placement is requested; :func:`repro.engine.topology.resolve`
+      is the one place meshes get constructed from it.
+    * ``mesh`` / ``mesh_axes`` / ``stream_axis`` — **deprecated** raw-mesh
+      plumbing, kept as a shim: a constructed ``mesh`` is wrapped into the
+      equivalent topology descriptor (bit-identical results) with a
+      ``DeprecationWarning``.  Pass ``topology=`` instead; setting both is
+      an error.
 
     Streaming runner (out-of-core data):
 
@@ -108,7 +116,8 @@ class BigMeansConfig:
     sync: str = "auto"
     scheduler: str = "uniform"
     competitive_ladder: tuple = ()
-    mesh: Any = None
+    topology: Any = "auto"     # kind name or engine.topology.TopologySpec
+    mesh: Any = None           # deprecated: use topology=
     mesh_axes: tuple = ("data",)
     stream_axis: str = "streams"
     # --- streaming runner
@@ -200,6 +209,25 @@ class BigMeansConfig:
             raise ValueError(
                 "scheduler='competitive_s' races streams against each "
                 f"other; it needs batch >= 2, got batch={self.batch}")
+        from repro.engine import topology as topo_lib
+
+        # normalize to a frozen TopologySpec (validates kind/fields once,
+        # here, so every strategy downstream can trust the spec)
+        object.__setattr__(self, "topology", topo_lib.as_spec(self.topology))
+        if self.mesh is not None:
+            if self.topology.kind != "auto":
+                raise ValueError(
+                    "cfg.mesh (deprecated) and cfg.topology are mutually "
+                    "exclusive; drop the raw mesh and describe it with "
+                    f"topology= (got topology={self.topology.kind!r})")
+            import warnings
+
+            warnings.warn(
+                "BigMeansConfig(mesh=...) is deprecated: pass a declarative "
+                "topology= spec (e.g. topology='stream_mesh' or "
+                "TopologySpec(kind='worker_mesh', devices=4)); the raw mesh "
+                "is wrapped into the equivalent topology for now",
+                DeprecationWarning, stacklevel=3)
 
     def replace(self, **overrides) -> "BigMeansConfig":
         """A copy with ``overrides`` applied (re-validated)."""

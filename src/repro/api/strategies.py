@@ -8,17 +8,24 @@ FitResult`` contract:
 * ``sequential`` — the paper's Algorithm 3: single device, scalar stream
   (``engine.incore.sequential``).
 * ``batched``    — B incumbent streams per device
-  (``engine.incore.batched_local``; with ``config.mesh`` the stream axis is
-  sharded, ``batched_stream_mesh``).
+  (``engine.incore.batched_local``; with ``topology='stream_mesh'`` the
+  stream axis is sharded, ``batched_stream_mesh``).
 * ``sharded``    — multi-worker chunk streams with periodic incumbent
   exchange (``engine.incore.worker_sharded``); with checkpointing or a time
   budget the same windows run host-orchestrated
   (``worker_sharded_rounds``) so the middleware stack composes.
 * ``streaming``  — the out-of-core host loop (``engine.stream.run_stream``):
-  prefetch pipeline, checkpoints, time budget, VNS ladder — on one device
-  or with the stream axis sharded over ``config.mesh``.
+  prefetch pipeline, checkpoints, time budget, VNS ladder — on one device,
+  with the stream axis sharded (``topology='stream_mesh'``), or scaled out
+  over processes (``topology='host_mesh'`` →
+  ``engine.hostmesh.run_host_stream``).
 * ``auto``       — picks one of the above from the config + data source +
   hardware topology.
+
+Placement is declarative: strategies consume ``cfg.topology`` (a
+:class:`repro.engine.topology.TopologySpec`) through
+``engine.topology.from_config`` and never hand-build meshes; the deprecated
+raw ``cfg.mesh`` rides the same path via the shim, bit-identically.
 
 Strategies are registered by name so follow-up work (competitive sample-size
 optimization, stream fusion — arXiv:2403.18766 / 2410.14548) plugs in as
@@ -102,10 +109,6 @@ def _result_from_state(state, infos, cfg, strategy, **extras) -> FitResult:
     )
 
 
-def _mesh_size(mesh) -> int:
-    return int(mesh.devices.size)
-
-
 def _resolve_sync_every(cfg: BigMeansConfig, rounds: int) -> int:
     """Concrete exchange period from the sync-policy knob (``'competitive'``
     resolves to a single final exchange)."""
@@ -145,6 +148,8 @@ def _fit_batched(cfg: BigMeansConfig, source: DataSource,
                  key: jax.Array) -> FitResult:
     from repro.core import bigmeans
 
+    from repro.engine import topology as topo_lib
+
     if cfg.n_chunks % cfg.batch:
         raise ValueError(
             f"strategy 'batched' needs batch ({cfg.batch}) to divide "
@@ -155,9 +160,16 @@ def _fit_batched(cfg: BigMeansConfig, source: DataSource,
         raise ValueError(
             f"strategy 'batched' needs sync_every ({sync_every}) to "
             f"divide the round count ({rounds} = n_chunks / batch)")
-    if cfg.mesh is not None and cfg.batch % _mesh_size(cfg.mesh):
+    topo = topo_lib.for_streams(cfg)
+    if not isinstance(topo, (topo_lib.SingleDevice, topo_lib.StreamMesh)):
         raise ValueError(
-            f"stream mesh has {_mesh_size(cfg.mesh)} devices, which must "
+            f"strategy 'batched' runs on 'single' or 'stream_mesh' "
+            f"topologies, got {topo.name!r}")
+    mesh = topo.mesh if isinstance(topo, topo_lib.StreamMesh) else None
+    stream_axis = topo.axis if mesh is not None else cfg.stream_axis
+    if mesh is not None and cfg.batch % topo.devices:
+        raise ValueError(
+            f"stream mesh has {topo.devices} devices, which must "
             f"divide batch ({cfg.batch})")
 
     X = _require_array(source, "batched")
@@ -166,7 +178,7 @@ def _fit_batched(cfg: BigMeansConfig, source: DataSource,
         sync_every=sync_every, max_iters=cfg.max_iters, tol=cfg.tol,
         candidates=cfg.candidates, impl=cfg.impl,
         with_replacement=cfg.with_replacement, precision=cfg.precision,
-        mesh=cfg.mesh, stream_axis=cfg.stream_axis)
+        mesh=mesh, stream_axis=stream_axis)
     return _result_from_state(
         state, infos, cfg, "batched", batch=cfg.batch, rounds=rounds)
 
@@ -175,13 +187,18 @@ def _fit_batched(cfg: BigMeansConfig, source: DataSource,
 def _fit_sharded(cfg: BigMeansConfig, source: DataSource,
                  key: jax.Array) -> FitResult:
     from repro.engine import incore, middleware as mw
-    from repro.launch.mesh import make_mesh
+    from repro.engine import topology as topo_lib
 
-    mesh = cfg.mesh
-    if mesh is None:
-        ndev = len(jax.devices())
-        mesh = make_mesh((ndev,), cfg.mesh_axes[:1])
-    workers = _mesh_size(mesh)
+    spec = cfg.topology
+    if cfg.mesh is None and spec.kind == "auto" \
+            and tuple(cfg.mesh_axes[:1]) != ("data",):
+        # legacy axis-name knob without a mesh: honour it through the spec
+        spec = topo_lib.TopologySpec(kind="worker_mesh",
+                                     axes=tuple(cfg.mesh_axes[:1]))
+        topo = topo_lib.resolve(spec, role="worker")
+    else:
+        topo = topo_lib.for_workers(cfg)
+    mesh, workers = topo.mesh, topo.devices
     if cfg.n_chunks % workers:
         raise ValueError(
             f"strategy 'sharded' needs the worker count ({workers}) to "
@@ -197,7 +214,7 @@ def _fit_sharded(cfg: BigMeansConfig, source: DataSource,
     X = _require_array(source, "sharded")
     kwargs = dict(
         mesh=mesh, k=cfg.k, s=cfg.s, chunks_per_worker=chunks_per_worker,
-        sync_every=sync_every, axes=tuple(mesh.axis_names),
+        sync_every=sync_every, axes=topo.axes,
         max_iters=cfg.max_iters, tol=cfg.tol, candidates=cfg.candidates,
         impl=cfg.impl, with_replacement=cfg.with_replacement,
         precision=cfg.precision)
@@ -225,10 +242,13 @@ def _fit_sharded(cfg: BigMeansConfig, source: DataSource,
 @register_strategy("streaming")
 def _fit_streaming(cfg: BigMeansConfig, source: DataSource,
                    key: jax.Array) -> FitResult:
+    from repro.engine import hostmesh
     from repro.engine import scheduler as sched_lib
     from repro.engine import stream as engine_stream
+    from repro.engine import topology as topo_lib
     from repro.kernels import precision as px
 
+    topology = topo_lib.for_streams(cfg)
     scheduler = sched_lib.get_scheduler(cfg.scheduler, cfg)
     fetch_s = getattr(scheduler, "fetch_s", cfg.s) or cfg.s
     # bf16 precision: chunks are cast on the host (prefetch thread) so
@@ -237,9 +257,17 @@ def _fit_streaming(cfg: BigMeansConfig, source: DataSource,
     provider = source.provider(
         fetch_s, seed=cfg.seed, with_replacement=cfg.with_replacement,
         dtype=px.host_dtype(cfg.precision))
-    state, metrics = engine_stream.run_stream(
-        provider, cfg, n_features=source.n_features, resume=cfg.resume,
-        key=key, scheduler=scheduler)
+    if isinstance(topology, topo_lib.HostMesh):
+        # multi-host scale-out: this process runs its chunk-id shard and
+        # exchanges incumbents at sync windows (run_host_stream builds the
+        # rank-local scheduler, so the config-level one is discarded)
+        state, metrics = hostmesh.run_host_stream(
+            provider, cfg, topology=topology, n_features=source.n_features,
+            resume=cfg.resume, key=key)
+    else:
+        state, metrics = engine_stream.run_stream(
+            provider, cfg, n_features=source.n_features, resume=cfg.resume,
+            key=key, scheduler=scheduler, topology=topology)
     extras = {"chunks_failed": metrics.chunks_failed,
               "chunks_dropped": metrics.chunks_dropped,
               "chunks_quarantined": metrics.chunks_quarantined}
@@ -258,7 +286,12 @@ def _fit_streaming(cfg: BigMeansConfig, source: DataSource,
         "quarantine_reasons": [
             (t[1], t[2]) for t in metrics.trace if t[0] == "quarantine"],
     }
-    if isinstance(scheduler, sched_lib.CompetitiveS):
+    if metrics.host is not None:
+        # the final cross-host gather: every rank's reconciliation record
+        extras["health"]["ranks"] = metrics.host["per_rank"]
+        extras["host"] = {k: metrics.host[k]
+                          for k in ("rank", "processes", "winner_rank")}
+    if metrics.host is None and isinstance(scheduler, sched_lib.CompetitiveS):
         extras["competitive_s"] = {
             "ladder": scheduler.ladder,
             "final_sizes": list(scheduler.s_of),
@@ -291,6 +324,12 @@ def resolve_auto(cfg: BigMeansConfig, source: DataSource) -> str:
     divide the per-worker chunk count — see :func:`_fit_auto`); otherwise
     the paper's ``sequential``.
     """
+    from repro.engine import topology as topo_lib
+
+    kind = topo_lib.requested_kind(cfg)
+    if kind == "host_mesh":
+        return "streaming"          # host_mesh is a streaming-only topology
+    worker_kind = kind in ("legacy_mesh", "worker_mesh")
     wants_runner = (cfg.ckpt_dir is not None or cfg.time_budget_s is not None
                     or bool(cfg.vns_ladder)
                     or cfg.scheduler == "competitive_s")
@@ -298,27 +337,26 @@ def resolve_auto(cfg: BigMeansConfig, source: DataSource) -> str:
         if cfg.ckpt_dir is not None and source.in_core \
                 and not source.prefers_streaming and cfg.batch == 1 \
                 and not cfg.vns_ladder and cfg.scheduler == "uniform" \
-                and cfg.mesh is not None \
-                and cfg.n_chunks % _mesh_size(cfg.mesh) == 0:
+                and worker_kind \
+                and cfg.n_chunks % topo_lib.worker_count(cfg) == 0:
             return "sharded"        # in-core mesh + checkpoints: now possible
         return "streaming"
     if cfg.batch > 1:
         return "batched"
-    if cfg.mesh is not None or len(jax.devices()) > 1:
-        workers = (_mesh_size(cfg.mesh) if cfg.mesh is not None
-                   else len(jax.devices()))
-        if cfg.n_chunks % workers == 0:
+    if worker_kind or (kind == "auto" and len(jax.devices()) > 1):
+        if cfg.n_chunks % topo_lib.worker_count(cfg) == 0:
             return "sharded"
     return "sequential"
 
 
 def _fit_auto(cfg: BigMeansConfig, source: DataSource,
               key: jax.Array) -> FitResult:
+    from repro.engine import topology as topo_lib
+
     name = resolve_auto(cfg, source)
     extras = {}
     if name == "sharded":
-        workers = (_mesh_size(cfg.mesh) if cfg.mesh is not None
-                   else len(jax.devices()))
+        workers = topo_lib.worker_count(cfg)
         chunks_per_worker = cfg.n_chunks // workers
         if chunks_per_worker % cfg.sync_every:
             # auto never downgrades a multi-device host to sequential over

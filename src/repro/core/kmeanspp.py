@@ -17,10 +17,15 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.ref import pairwise_sqdist_ref
 
-_BIG = jnp.float32(1e30)
+# np scalar, not jnp: a module-level jnp constant would initialize the XLA
+# backend at import time, which breaks jax.distributed.initialize() (it must
+# run before the first JAX computation in a multi-host process).  Same f32
+# dtype and bits inside every op that consumes it.
+_BIG = np.float32(1e30)
 
 
 def _safe_d2_logits(d: jax.Array) -> jax.Array:

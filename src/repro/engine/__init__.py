@@ -30,6 +30,7 @@ The legacy entry points (``repro.core.bigmeans.big_means*``,
 assemblies of these pieces.
 """
 from repro.engine import faults as faults
+from repro.engine import hostmesh as hostmesh
 from repro.engine import incore as incore
 from repro.engine import middleware as middleware
 from repro.engine import scheduler as scheduler
@@ -40,6 +41,7 @@ from repro.engine.faults import (
     ChunkQuarantined,
     FaultPlan,
     FetchTimeout,
+    HostDead,
     InvariantViolation,
     PermanentFault,
     RetryPolicy,
@@ -67,9 +69,17 @@ from repro.engine.scheduler import (
     list_schedulers,
     register_scheduler,
 )
+from repro.engine.hostmesh import launch_local, run_host_stream
 from repro.engine.stream import EndOfStream, RunnerMetrics, run_stream
 from repro.engine.sync import SyncPolicy, collective, competitive, periodic
-from repro.engine.topology import SingleDevice, StreamMesh, WorkerMesh
+from repro.engine.topology import (
+    HostMesh,
+    SingleDevice,
+    StreamMesh,
+    TopologySpec,
+    WorkerMesh,
+    resolve,
+)
 
 __all__ = [
     "Checkpoint",
@@ -81,6 +91,8 @@ __all__ = [
     "FaultPlan",
     "FetchSkip",
     "FetchTimeout",
+    "HostDead",
+    "HostMesh",
     "InvariantGuard",
     "InvariantViolation",
     "Middleware",
@@ -92,6 +104,7 @@ __all__ = [
     "StreamMesh",
     "SyncPolicy",
     "TimeBudget",
+    "TopologySpec",
     "TraceLog",
     "TransientFault",
     "Uniform",
@@ -103,12 +116,16 @@ __all__ = [
     "default_stack",
     "faults",
     "get_scheduler",
+    "hostmesh",
     "incore",
+    "launch_local",
     "list_schedulers",
     "load_loop_state",
     "middleware",
     "periodic",
     "register_scheduler",
+    "resolve",
+    "run_host_stream",
     "run_stream",
     "scheduler",
     "stream",

@@ -56,6 +56,22 @@ class FetchTimeout(TransientFault):
     """A provider call exceeded the watchdog timeout (hung fetch)."""
 
 
+class HostDead(PermanentFault):
+    """A peer process missed a cross-host exchange window (crashed, hung,
+    or partitioned): the multi-host run fails *loudly* at the sync barrier
+    instead of hanging.  Raised by :mod:`repro.engine.hostmesh` with the
+    local ``rank``, the exchange ``window`` that timed out, and this rank's
+    ``health`` accounting (``done+failed+dropped+quarantined == fetched``)
+    attached — so a surviving rank can report exactly what it completed."""
+
+    def __init__(self, message: str, *, rank: int | None = None,
+                 window=None, health: dict | None = None):
+        super().__init__(message)
+        self.rank = rank
+        self.window = window
+        self.health = health
+
+
 class ChunkQuarantined(Exception):
     """Raised by the chunk sanitizer: the chunk arrived but its *data* is
     unusable (non-finite values, wrong shape).  Carries the reason string

@@ -250,6 +250,9 @@ def worker_sharded(
     local sampling equivalent to global sampling).  PRNG keys are folded with
     the worker index, so results are reproducible for a fixed topology.
     """
+    from repro.engine.topology import check_axes
+
+    check_axes(mesh, axes)
     assert chunks_per_worker % sync_every == 0, "sync_every must divide chunks"
     n_rounds = chunks_per_worker // sync_every
     axis = axes if len(axes) > 1 else axes[0]
@@ -385,6 +388,9 @@ def worker_sharded_rounds(
     Returns ``(state, infos, ctx)``; ``state`` is the reduced incumbent,
     ``infos`` the worker-major chunk trace of the windows that ran.
     """
+    from repro.engine.topology import check_axes
+
+    check_axes(mesh, axes)
     assert chunks_per_worker % sync_every == 0, "sync_every must divide chunks"
     n_rounds = chunks_per_worker // sync_every
     W = 1

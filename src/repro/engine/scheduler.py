@@ -109,11 +109,17 @@ class CompetitiveS:
     Chunks are fetched at ``fetch_s = max(ladder)`` and sliced per stream,
     so one provider serves every size and replay invariance is preserved
     (per-chunk keys remain ``fold_in(seed, chunk_id)``).
+
+    ``stream_offset`` shifts the round-robin deal: a host-mesh rank owning
+    global streams ``[offset, offset + batch)`` deals its local ladder from
+    the global stream index, so the fleet-wide size assignment matches the
+    single-process run of the same global batch.
     """
 
     name = "competitive_s"
 
-    def __init__(self, cfg=None, *, ladder=None, batch=None):
+    def __init__(self, cfg=None, *, ladder=None, batch=None,
+                 stream_offset: int = 0):
         if cfg is not None:
             ladder = tuple(cfg.competitive_ladder) or default_ladder(
                 cfg.k, cfg.s)
@@ -125,7 +131,8 @@ class CompetitiveS:
                 f"competitive_s races streams against each other; it needs "
                 f"batch >= 2, got {batch}")
         self.ladder = tuple(sorted(set(int(x) for x in ladder)))
-        self.s_of = [self.ladder[b % len(self.ladder)] for b in range(batch)]
+        self.s_of = [self.ladder[(stream_offset + b) % len(self.ladder)]
+                     for b in range(batch)]
         self.history: list[dict] = []
 
     @property

@@ -90,6 +90,9 @@ class RunnerMetrics:
     wall_time_s: float = 0.0
     f_best: float = float("inf")
     trace: list = dataclasses.field(default_factory=list)
+    # multi-host runs (repro.engine.hostmesh): the final per-rank health
+    # gather — {"rank", "processes", "winner_rank", "per_rank": [...]}.
+    host: dict | None = None
 
 
 class _FetchFailure:
@@ -324,6 +327,7 @@ def run_stream(
     topology=None,
     scheduler=None,
     sync=None,
+    host=None,
 ) -> tuple[bigmeans.BigMeansState, RunnerMetrics]:
     """Stream chunks through Big-means until the chunk count or a middleware
     stop condition (time budget, custom) ends the run.
@@ -333,6 +337,11 @@ def run_stream(
     the config-derived assembly (:func:`repro.engine.middleware
     .default_stack`, :func:`repro.engine.topology.for_streams`,
     ``cfg.scheduler``, ``cfg.sync``/``cfg.sync_every``).
+
+    ``host`` plugs in a :class:`repro.engine.hostmesh.HostExchanger` for
+    multi-host runs: it owns this rank's chunk-id shard, the cross-host
+    incumbent exchange at sync windows, and the final argmin-reduce.  With
+    ``host=None`` (every single-process run) the loop body is untouched.
     """
     if key is None:
         key = jax.random.PRNGKey(cfg.seed)
@@ -344,6 +353,11 @@ def run_stream(
         raise ValueError(
             "the stream loop parallelizes over the stream axis; use "
             "StreamMesh (or the 'sharded' strategy for worker meshes)")
+    if isinstance(topology, topo_lib.HostMesh) and host is None:
+        raise ValueError(
+            "host_mesh runs go through repro.engine.hostmesh."
+            "run_host_stream (or fit(), which routes there): the stream "
+            "loop needs the exchanger's chunk-id shard and sync hooks")
     if middlewares is None:
         stack = mw.default_stack(cfg)
     elif isinstance(middlewares, mw.MiddlewareStack):
@@ -373,6 +387,10 @@ def run_stream(
         ckpt.maybe_restore(ctx, state)
         state, key = ctx.state, ctx.key
     start_chunk = ctx.start_step
+    if host is not None:
+        # collective start: every rank adopts rank 0's restored
+        # (state, key, step) so the fleet resumes the same global window
+        state, key, start_chunk = host.sync_start(ctx, state, key)
     metrics.f_best = float(np.asarray(state.f_best).min())
 
     from repro.kernels import precision as px
@@ -382,7 +400,8 @@ def run_stream(
     # int8 ships quantized codes over the host->device link (~1/4 of the
     # f32 bytes) and dequantizes on device, still off the main thread.
     stage = _stage_quantized if precision == "int8" else jax.device_put
-    ids = range(start_chunk, cfg.n_chunks)
+    ids = (host.chunk_ids(start_chunk) if host is not None
+           else range(start_chunk, cfg.n_chunks))
     retry = faults.RetryPolicy.from_config(cfg)
     timeout = getattr(cfg, "fetch_timeout_s", None)
     source = (
@@ -398,13 +417,20 @@ def run_stream(
 
     runner_fn = _run_persistent if persistent else _run_fold
     try:
-        state = runner_fn(source, state, ctx, stack, kernel, scheduler, sync)
+        state = runner_fn(source, state, ctx, stack, kernel, scheduler, sync,
+                          host)
     finally:
         if isinstance(source, _Prefetcher):
             source.close()
 
     ctx.state = state
     ctx.step = start_chunk + metrics.chunks_done
+    if host is not None:
+        # final cross-host argmin-reduce + counter merge + health gather;
+        # a dead peer surfaces here as a typed HostDead, never a hang
+        state = host.finalize(ctx, state)
+        ctx.state = state
+        ctx.step = host.global_step
     stack.on_finish(ctx)
     metrics.wall_time_s = time.monotonic() - ctx.t0
     metrics.f_best = float(np.asarray(state.f_best).min())
@@ -437,7 +463,7 @@ def _consume_info(ctx, info):
     m.lloyd_iters += int(np.sum(np.asarray(info.lloyd_iters)))
 
 
-def _run_fold(source, state, ctx, stack, kernel, scheduler, sync):
+def _run_fold(source, state, ctx, stack, kernel, scheduler, sync, host=None):
     """Collective mode: one incumbent, argmin-reduced after every batch."""
     cfg = ctx.cfg
     metrics = ctx.metrics
@@ -449,8 +475,14 @@ def _run_fold(source, state, ctx, stack, kernel, scheduler, sync):
         ctx.last_cid = pending[-1][0]
         pending.clear()
         _consume_info(ctx, info)
+        if host is not None:
+            # cross-host exchange BEFORE after_window, so the (rank-0)
+            # checkpoint holds the post-exchange global incumbent at the
+            # global chunk frontier
+            state = host.fold_boundary(ctx, state)
         ctx.state, ctx.info = state, info
-        ctx.step = ctx.start_step + metrics.chunks_done
+        ctx.step = (host.global_step if host is not None
+                    else ctx.start_step + metrics.chunks_done)
         stack.after_window(ctx)
         return state
 
@@ -501,7 +533,8 @@ def _run_fold(source, state, ctx, stack, kernel, scheduler, sync):
     return state
 
 
-def _run_persistent(source, state, ctx, stack, kernel, scheduler, sync):
+def _run_persistent(source, state, ctx, stack, kernel, scheduler, sync,
+                    host=None):
     """Persistent-stream mode: B incumbents advance across batches and
     exchange only at sync boundaries (periodic/competitive modes, and the
     ``competitive_s`` sample-size race)."""
@@ -572,6 +605,7 @@ def _run_persistent(source, state, ctx, stack, kernel, scheduler, sync):
         else:
             f = np.asarray(states.f_best, dtype=np.float64)
             w = int(np.argmin(f / np.asarray(sizes, dtype=np.float64)))
+        ctx.extras["winner_s"] = int(sizes[w])
         return bigmeans.BigMeansState(
             centroids=states.centroids[w],
             degenerate=states.degenerate[w],
@@ -650,10 +684,21 @@ def _run_persistent(source, state, ctx, stack, kernel, scheduler, sync):
             continue
         states = step_round(states, pending)
         pending = []
-        ctx.state = reduce(states)
-        ctx.step = ctx.start_step + metrics.chunks_done
-        stack.after_window(ctx)
-        states = boundary(states)
+        if host is None:
+            ctx.state = reduce(states)
+            ctx.step = ctx.start_step + metrics.chunks_done
+            stack.after_window(ctx)
+            states = boundary(states)
+        else:
+            # host order: local boundary (observe + local sync) first, then
+            # the cross-host exchange, and only then checkpoint — so the
+            # rank-0 checkpoint holds the post-exchange global state at the
+            # global window frontier
+            states = boundary(states)
+            states = host.persistent_boundary(ctx, states, sizes)
+            ctx.state = reduce(states)
+            ctx.step = host.global_step
+            stack.after_window(ctx)
         round_idx += 1
         if stack.should_stop(ctx):
             stopped = True
@@ -663,7 +708,8 @@ def _run_persistent(source, state, ctx, stack, kernel, scheduler, sync):
             states = step_round(states, pending)
             pending = []
             ctx.state = reduce(states)
-            ctx.step = ctx.start_step + metrics.chunks_done
+            ctx.step = (host.global_step if host is not None
+                        else ctx.start_step + metrics.chunks_done)
             stack.after_window(ctx)
     if stopped:
         _drop_pending(ctx, pending)

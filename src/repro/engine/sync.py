@@ -40,6 +40,14 @@ class SyncPolicy:
         """Host loop: should streams exchange incumbents after this round?"""
         return self.every is not None and (round_idx + 1) % self.every == 0
 
+    @property
+    def final_only(self) -> bool:
+        """True when streams never exchange before the final reduce
+        (competitive mode) — multi-host runs skip every mid-run barrier,
+        which is where the straggler tolerance comes from: a slow host
+        simply loses the final argmin instead of stalling its peers."""
+        return self.every is None
+
 
 def collective() -> SyncPolicy:
     return SyncPolicy(1, "collective")

@@ -7,18 +7,40 @@ placement:
 * :class:`SingleDevice` — all streams on one device (batched or scalar).
 * :class:`StreamMesh` — the B-stream batch axis sharded over a 1-axis device
   mesh; incumbent exchange is an argmin-all-gather.  Works for both the
-  in-core batched driver and (new) the out-of-core host loop, where the
+  in-core batched driver and the out-of-core host loop, where the
   prefetcher feeds device-sharded chunk stacks.
 * :class:`WorkerMesh` — one independent chunk stream per worker group of a
   mesh (the multi-worker driver); exchange is a tiny argmin-all-reduce.
+* :class:`HostMesh` — one process per host (``jax.distributed``), each
+  owning a disjoint shard of the chunk-id stream; incumbent exchange rides
+  the coordination service at sync windows (:mod:`repro.engine.hostmesh`).
 
 Descriptors are hashable so they can ride through ``jax.jit`` static
 arguments exactly like the raw ``mesh`` objects did.
+
+Callers no longer hand-build meshes: a declarative :class:`TopologySpec`
+(``BigMeansConfig.topology``) names the placement and :func:`resolve` — the
+single place device meshes get constructed — turns it into a descriptor.
+Raw ``cfg.mesh`` objects keep working through :func:`from_config`'s
+deprecation shim, bit-identically.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any
+
+KINDS = ("auto", "single", "stream_mesh", "worker_mesh", "host_mesh")
+
+
+def check_axes(mesh, axes) -> None:
+    """Every name in ``axes`` must be an axis of ``mesh`` — validated at
+    descriptor construction, so a typo fails here with the mesh's real axis
+    names instead of deep inside jit as an opaque ``KeyError``."""
+    known = tuple(mesh.axis_names)
+    missing = [a for a in axes if a not in known]
+    if missing:
+        raise ValueError(
+            f"axes {missing} not in mesh (mesh axes: {known})")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +60,9 @@ class StreamMesh:
     axis: str = "streams"
     name: str = dataclasses.field(default="stream_mesh", init=False)
 
+    def __post_init__(self):
+        check_axes(self.mesh, (self.axis,))
+
     @property
     def devices(self) -> int:
         return int(self.mesh.shape[self.axis])
@@ -51,6 +76,12 @@ class WorkerMesh:
     axes: tuple = ("data",)
     name: str = dataclasses.field(default="worker_mesh", init=False)
 
+    def __post_init__(self):
+        object.__setattr__(self, "axes", tuple(self.axes))
+        if not self.axes:
+            raise ValueError("WorkerMesh needs at least one mesh axis")
+        check_axes(self.mesh, self.axes)
+
     @property
     def devices(self) -> int:
         w = 1
@@ -59,19 +90,237 @@ class WorkerMesh:
         return w
 
 
-Topology = SingleDevice | StreamMesh | WorkerMesh
+@dataclasses.dataclass(frozen=True)
+class HostMesh:
+    """One process per host over ``jax.distributed``; each rank owns a
+    disjoint shard of the chunk-id stream and exchanges incumbents at sync
+    windows (see :mod:`repro.engine.hostmesh`)."""
+
+    processes: int
+    rank: int
+    sync_timeout_s: float = 60.0
+    straggler_s: float = 5.0
+    name: str = dataclasses.field(default="host_mesh", init=False)
+
+    def __post_init__(self):
+        if self.processes < 1:
+            raise ValueError(f"processes must be >= 1, got {self.processes}")
+        if not 0 <= self.rank < self.processes:
+            raise ValueError(
+                f"rank {self.rank} out of range for {self.processes} "
+                "processes")
+
+    @property
+    def devices(self) -> int:
+        return self.processes
+
+
+Topology = SingleDevice | StreamMesh | WorkerMesh | HostMesh
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """Declarative placement: *what* topology, not *how* to build it.
+
+    ``BigMeansConfig.topology`` accepts a kind string or one of these;
+    :func:`resolve` is the single place the named meshes/processes become
+    concrete descriptors.
+
+    * ``kind`` — ``'auto'`` (strategy picks), ``'single'``,
+      ``'stream_mesh'``, ``'worker_mesh'``, ``'host_mesh'``.
+    * ``devices`` — local device count (int; 1-axis meshes) or a full mesh
+      shape tuple (``worker_mesh`` multi-axis); ``None`` = all local devices.
+    * ``axes`` — mesh axis names; defaults: ``('streams',)`` for
+      ``stream_mesh``, ``('data',)`` for ``worker_mesh``.
+    * ``hosts`` / ``coordinator`` / ``rank`` — ``host_mesh`` bootstrap
+      (``None`` reads the ``REPRO_NUM_HOSTS`` / ``REPRO_COORD`` /
+      ``REPRO_HOST_RANK`` environment, the launcher contract of
+      :func:`repro.engine.hostmesh.launch_local`).
+    * ``sync_timeout_s`` — how long a rank waits at an exchange window for
+      its peers before the run fails with a typed
+      :class:`repro.engine.faults.HostDead` (never a hang).
+    * ``straggler_s`` — gather wall time above this emits a
+      ``('host_straggler', window, seconds)`` trace event.
+    """
+
+    kind: str = "auto"
+    devices: Any = None
+    axes: tuple = ()
+    hosts: int | None = None
+    coordinator: str | None = None
+    rank: int | None = None
+    sync_timeout_s: float = 60.0
+    straggler_s: float = 5.0
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"unknown topology kind {self.kind!r}; known: {KINDS}")
+        object.__setattr__(self, "axes", tuple(self.axes))
+        for a in self.axes:
+            if not isinstance(a, str) or not a:
+                raise ValueError(
+                    f"axes must be non-empty strings, got {a!r}")
+        d = self.devices
+        if d is not None:
+            if isinstance(d, int) and not isinstance(d, bool):
+                if d < 1:
+                    raise ValueError(f"devices must be >= 1, got {d}")
+            elif isinstance(d, (tuple, list)):
+                object.__setattr__(self, "devices", tuple(int(x) for x in d))
+                if not self.devices or any(x < 1 for x in self.devices):
+                    raise ValueError(
+                        f"devices shape must be positive ints, got {d!r}")
+                if self.axes and len(self.devices) != len(self.axes):
+                    raise ValueError(
+                        f"devices shape {self.devices} and axes {self.axes} "
+                        "must have the same length")
+            else:
+                raise ValueError(
+                    f"devices must be an int, a shape tuple or None, "
+                    f"got {d!r}")
+        if self.hosts is not None and (
+                not isinstance(self.hosts, int) or self.hosts < 1):
+            raise ValueError(f"hosts must be a positive int, got {self.hosts!r}")
+        if self.rank is not None and (
+                not isinstance(self.rank, int) or self.rank < 0):
+            raise ValueError(f"rank must be an int >= 0, got {self.rank!r}")
+        if self.sync_timeout_s <= 0 or self.straggler_s <= 0:
+            raise ValueError("sync_timeout_s and straggler_s must be positive")
+        if self.kind != "host_mesh" and (
+                self.hosts is not None or self.coordinator is not None
+                or self.rank is not None):
+            raise ValueError(
+                "hosts/coordinator/rank only apply to kind='host_mesh', "
+                f"got kind={self.kind!r}")
+        if self.kind in ("single", "host_mesh") and self.devices is not None:
+            raise ValueError(
+                f"kind={self.kind!r} takes no devices field (use hosts for "
+                "host_mesh)")
+
+
+def as_spec(value) -> TopologySpec:
+    """Coerce ``'single'``-style kind strings to a :class:`TopologySpec`."""
+    if isinstance(value, TopologySpec):
+        return value
+    if isinstance(value, str):
+        return TopologySpec(kind=value)
+    raise TypeError(
+        f"topology must be a kind string {KINDS} or a TopologySpec, "
+        f"got {type(value).__name__}")
+
+
+def _local_device_count() -> int:
+    import jax
+
+    # jax.devices(), not local_devices(): identical in every single-process
+    # setup, and the legacy strategies counted jax.devices() — host_mesh is
+    # the only multi-process path and never auto-sizes a device mesh.
+    return len(jax.devices())
+
+
+def _build_mesh(shape, axes):
+    from repro.launch.mesh import make_mesh
+
+    return make_mesh(tuple(shape), tuple(axes))
+
+
+def resolve(spec, *, role: str = "stream") -> Topology:
+    """The single place topology specs become concrete descriptors (and the
+    single place device meshes get constructed).
+
+    ``role`` disambiguates ``'auto'``: the stream loop defaults to one
+    device (bit-identical to the historical no-mesh path), the sharded
+    driver to a worker mesh over every local device.
+    """
+    spec = as_spec(spec)
+    kind = spec.kind
+    if kind == "auto":
+        kind = "worker_mesh" if role == "worker" else "single"
+    if kind == "single":
+        if role == "worker":    # sharded strategy forced onto one device
+            return WorkerMesh(_build_mesh((1,), spec.axes or ("data",)),
+                              spec.axes or ("data",))
+        return SingleDevice()
+    if kind == "stream_mesh":
+        axis = spec.axes[0] if spec.axes else "streams"
+        ndev = spec.devices if isinstance(spec.devices, int) \
+            else _local_device_count()
+        return StreamMesh(_build_mesh((ndev,), (axis,)), axis)
+    if kind == "worker_mesh":
+        axes = spec.axes or ("data",)
+        if isinstance(spec.devices, tuple):
+            shape = spec.devices
+        else:
+            ndev = spec.devices if isinstance(spec.devices, int) \
+                else _local_device_count()
+            if len(axes) > 1:
+                raise ValueError(
+                    f"worker_mesh with axes {axes} needs devices as a "
+                    "matching shape tuple")
+            shape = (ndev,)
+        return WorkerMesh(_build_mesh(shape, axes), axes)
+    # host_mesh: bootstrap (or join) the jax.distributed process group
+    from repro.engine import hostmesh
+
+    processes, rank = hostmesh.bootstrap(spec)
+    return HostMesh(processes=processes, rank=rank,
+                    sync_timeout_s=spec.sync_timeout_s,
+                    straggler_s=spec.straggler_s)
+
+
+def requested_kind(cfg) -> str:
+    """The placement a config asks for, without constructing anything.
+
+    ``'legacy_mesh'`` when a raw ``cfg.mesh`` is set (the deprecated path);
+    otherwise the spec's kind verbatim (``'auto'`` included).
+    """
+    if getattr(cfg, "mesh", None) is not None:
+        return "legacy_mesh"
+    return as_spec(getattr(cfg, "topology", "auto")).kind
+
+
+def worker_count(cfg) -> int:
+    """How many workers a sharded run of this config would use — from the
+    legacy mesh, the spec's devices field, or the local device count."""
+    mesh = getattr(cfg, "mesh", None)
+    if mesh is not None:
+        return int(mesh.devices.size)
+    spec = as_spec(getattr(cfg, "topology", "auto"))
+    if isinstance(spec.devices, int):
+        return spec.devices
+    if isinstance(spec.devices, tuple):
+        w = 1
+        for x in spec.devices:
+            w *= x
+        return w
+    return _local_device_count()
+
+
+def from_config(cfg, role: str = "stream") -> Topology:
+    """Topology for a config: the spec path through :func:`resolve`, or the
+    raw-mesh deprecation shim (``cfg.mesh`` wrapped exactly as the legacy
+    strategies did — ``StreamMesh(mesh, cfg.stream_axis)`` for the stream
+    loop, ``WorkerMesh(mesh, mesh.axis_names)`` for the sharded driver —
+    so shimmed runs are bit-identical to spec runs on the same mesh)."""
+    mesh = getattr(cfg, "mesh", None)
+    if mesh is not None:
+        if role == "worker":
+            return WorkerMesh(mesh, tuple(mesh.axis_names))
+        return StreamMesh(mesh, getattr(cfg, "stream_axis", "streams"))
+    return resolve(getattr(cfg, "topology", "auto"), role=role)
 
 
 def for_streams(cfg) -> Topology:
-    """Stream-parallel topology from a config: ``cfg.mesh`` shards the
-    stream axis, otherwise everything stays on one device."""
-    if cfg.mesh is not None:
-        return StreamMesh(cfg.mesh, cfg.stream_axis)
-    return SingleDevice()
+    """Stream-parallel topology from a config (the stream loop's default)."""
+    return from_config(cfg, role="stream")
 
 
 def for_workers(cfg, mesh=None) -> WorkerMesh:
-    mesh = mesh if mesh is not None else cfg.mesh
-    if mesh is None:
-        raise ValueError("worker topology needs a device mesh")
-    return WorkerMesh(mesh, tuple(mesh.axis_names))
+    if mesh is not None:
+        return WorkerMesh(mesh, tuple(mesh.axis_names))
+    topo = from_config(cfg, role="worker")
+    if not isinstance(topo, WorkerMesh):
+        raise ValueError(
+            f"worker topology needs a device mesh, got {topo.name}")
+    return topo

@@ -48,6 +48,9 @@ class MethodSpec:
     ``method`` is what :func:`repro.api.fit` receives; ``overrides`` are
     applied on top of the dataset's protocol config (strategy knobs only
     — never ``k``/``s``/``n_chunks``, which the equal-budget rule owns).
+    ``runner`` picks the execution harness: ``"fit"`` runs in-process,
+    ``"host2p"`` launches a multi-process ``host_mesh`` fleet per seed
+    (:mod:`repro.evalsuite.hostcell`; ``overrides['hosts']`` sizes it).
     """
 
     name: str
@@ -55,6 +58,7 @@ class MethodSpec:
     method: str
     overrides: dict = dataclasses.field(default_factory=dict)
     tiers: tuple = ("quick", "full")
+    runner: str = "fit"            # "fit" (in-process) | "host2p"
 
 
 METHODS: tuple[MethodSpec, ...] = (
@@ -68,6 +72,12 @@ METHODS: tuple[MethodSpec, ...] = (
     MethodSpec("bm/competitive-s", "bigmeans", "streaming",
                {"batch": 4, "scheduler": "competitive_s", "sync_every": 2},
                tiers=("full",)),
+    # cross-host incumbent exchange: same equal-budget streaming protocol,
+    # split over a 2-process jax.distributed fleet (bit-identical to the
+    # single-process run by construction — run_cell asserts rank agreement)
+    MethodSpec("bm/hostmesh-2p", "bigmeans", "streaming",
+               {"batch": 4, "sync_every": 2, "hosts": 2},
+               runner="host2p"),
     # §5 baselines (full-data competitors through the same fit())
     MethodSpec("baseline/forgy", "baseline", "forgy"),
     MethodSpec("baseline/kmeanspp", "baseline", "kmeanspp"),
@@ -147,6 +157,17 @@ def run_suite(
         X = source.as_array()
         ds_rows = []
         for m in methods:
+            if m.runner == "host2p":
+                # Subprocess fleets are always cold (each launch compiles
+                # fresh), so there is no warm-up to run — the committed
+                # baseline's walls include compile the same way.
+                from repro.evalsuite import hostcell
+
+                ds_rows.extend(
+                    hostcell.run_cell(spec, m, seed, data_root=data_root,
+                                      verbose=verbose)
+                    for seed in seeds)
+                continue
             # Warm-up: one untimed fit per (dataset, method) cell so the
             # timed rows measure steady-state, not one-off jit compiles
             # (without this, seed 0's wall is ~95% compile on small cells

@@ -4,9 +4,12 @@
         --chunks 200 --scale 0.02 --ckpt /tmp/bigmeans_run
 
 Runs the host-streaming Big-means driver on a synthetic surrogate of the
-configured stream; ``--workers N`` switches to the sharded in-core driver
-over N forced host devices (spawn with XLA_FLAGS yourself in that case).
-For LM training smoke runs see ``examples/`` and the dry-run launcher.
+configured stream.  Placement is declarative: ``--topology`` names the
+spec (``single`` / ``stream_mesh`` / ``host_mesh``), and for ``host_mesh``
+the ``--hosts/--coordinator/--rank`` flags (or the ``REPRO_*`` env vars of
+``repro.engine.hostmesh.launch_local``) describe the process group — launch
+one copy of this command per rank.  For LM training smoke runs see
+``examples/`` and the dry-run launcher.
 """
 from __future__ import annotations
 
@@ -14,7 +17,7 @@ import argparse
 
 import numpy as np
 
-from repro.api import BigMeansConfig, fit
+from repro.api import BigMeansConfig, TopologySpec, fit
 from repro.data.synthetic import GMMSpec, gmm_chunk
 from repro.models.registry import get_config
 
@@ -28,6 +31,16 @@ def main() -> None:
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--time-budget", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--topology", default="auto",
+                    choices=["auto", "single", "stream_mesh", "host_mesh"],
+                    help="declarative placement (BigMeansConfig.topology)")
+    ap.add_argument("--hosts", type=int, default=None,
+                    help="host_mesh: process-group size (else REPRO_NUM_HOSTS)")
+    ap.add_argument("--coordinator", default=None,
+                    help="host_mesh: coordinator host:port (else REPRO_COORD)")
+    ap.add_argument("--rank", type=int, default=None,
+                    help="host_mesh: this process's rank (else "
+                         "REPRO_HOST_RANK)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -36,12 +49,18 @@ def main() -> None:
     spec = GMMSpec(m=m, n=cfg.n_features, components=cfg.k, spread=4.0,
                    seed=args.seed)
 
+    if args.topology == "host_mesh":
+        topology = TopologySpec(kind="host_mesh", hosts=args.hosts,
+                                coordinator=args.coordinator, rank=args.rank)
+    else:
+        topology = args.topology
     rcfg = BigMeansConfig.from_workload(
         cfg, n_chunks=args.chunks, time_budget_s=args.time_budget,
-        ckpt_dir=args.ckpt, seed=args.seed)
+        ckpt_dir=args.ckpt, seed=args.seed, topology=topology)
 
     print(f"[train] {args.arch}: m={m} n={cfg.n_features} k={rcfg.k} "
-          f"s={rcfg.s} chunks={args.chunks} batch={rcfg.batch}")
+          f"s={rcfg.s} chunks={args.chunks} batch={rcfg.batch} "
+          f"topology={rcfg.topology.kind}")
     result = fit(
         lambda cid: np.asarray(gmm_chunk(spec, cid, rcfg.s)), rcfg,
         method="streaming", n_features=cfg.n_features)

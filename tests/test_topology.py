@@ -1,0 +1,221 @@
+"""The declarative topology API: spec validation, the single resolve()
+construction point, the raw-mesh deprecation shim (bit-identical), and the
+degenerate single-process host_mesh path."""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import BigMeansConfig, TopologySpec, fit
+from repro.data.synthetic import GMMSpec, gmm_dataset
+from repro.engine import topology as topo
+from repro.launch.mesh import make_mesh
+
+X = gmm_dataset(GMMSpec(m=2000, n=5, components=4, seed=3))
+CFG = BigMeansConfig(k=4, s=64, n_chunks=8, log_every=0, impl="ref")
+
+
+# ---------------------------------------------------------------------------
+# TopologySpec validation
+# ---------------------------------------------------------------------------
+
+
+def test_spec_defaults_and_kinds():
+    assert TopologySpec().kind == "auto"
+    for kind in topo.KINDS:
+        if kind == "host_mesh":
+            assert TopologySpec(kind=kind, hosts=2, rank=0).hosts == 2
+        elif kind in ("auto", "single"):
+            TopologySpec(kind=kind)
+        else:
+            TopologySpec(kind=kind, devices=1)
+
+
+@pytest.mark.parametrize("bad", [
+    dict(kind="bogus"),
+    dict(kind="single", devices=2),
+    dict(kind="host_mesh", devices=2),
+    dict(kind="worker_mesh", devices=0),
+    dict(kind="worker_mesh", devices=(2, 2), axes=("data",)),
+    dict(kind="worker_mesh", axes=("",)),
+    dict(kind="stream_mesh", hosts=2),
+    dict(kind="single", coordinator="h:1"),
+    dict(kind="host_mesh", hosts=0),
+    dict(kind="host_mesh", rank=-1),
+    dict(kind="host_mesh", sync_timeout_s=0),
+])
+def test_spec_rejects(bad):
+    with pytest.raises(ValueError):
+        TopologySpec(**bad)
+
+
+def test_as_spec_coercion():
+    assert topo.as_spec("single").kind == "single"
+    spec = TopologySpec(kind="stream_mesh", devices=1)
+    assert topo.as_spec(spec) is spec
+    with pytest.raises(TypeError):
+        topo.as_spec(42)
+    with pytest.raises(ValueError):
+        topo.as_spec("not_a_kind")
+
+
+# ---------------------------------------------------------------------------
+# resolve(): the one mesh construction point
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_kinds():
+    assert isinstance(topo.resolve("single"), topo.SingleDevice)
+    assert isinstance(topo.resolve("auto"), topo.SingleDevice)
+    sm = topo.resolve(TopologySpec(kind="stream_mesh", devices=1))
+    assert isinstance(sm, topo.StreamMesh) and sm.axis == "streams"
+    wm = topo.resolve(TopologySpec(kind="worker_mesh", devices=1),
+                      role="worker")
+    assert isinstance(wm, topo.WorkerMesh) and wm.axes == ("data",)
+    auto_w = topo.resolve("auto", role="worker")
+    assert isinstance(auto_w, topo.WorkerMesh)
+    assert auto_w.devices == len(jax.devices())
+
+
+def test_resolve_host_mesh_degenerate(monkeypatch):
+    """hosts=1 (or nothing set) is the no-bootstrap single-process group."""
+    monkeypatch.delenv("REPRO_NUM_HOSTS", raising=False)
+    hm = topo.resolve("host_mesh")
+    assert isinstance(hm, topo.HostMesh)
+    assert (hm.processes, hm.rank) == (1, 0)
+
+
+def test_worker_mesh_validates_axes_at_construction():
+    mesh = make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="'bogus'.*data"):
+        topo.WorkerMesh(mesh, ("bogus",))
+    with pytest.raises(ValueError, match="at least one"):
+        topo.WorkerMesh(mesh, ())
+    with pytest.raises(ValueError, match="'nope'"):
+        topo.StreamMesh(mesh, "nope")
+    # valid axes still construct
+    assert topo.WorkerMesh(mesh, ("data",)).devices == 1
+
+
+def test_host_mesh_descriptor_validation():
+    with pytest.raises(ValueError):
+        topo.HostMesh(processes=0, rank=0)
+    with pytest.raises(ValueError):
+        topo.HostMesh(processes=2, rank=2)
+    assert topo.HostMesh(processes=2, rank=1).devices == 2
+
+
+def test_requested_kind_and_worker_count():
+    assert topo.requested_kind(CFG) == "auto"
+    cfg = CFG.replace(topology=TopologySpec(kind="worker_mesh", devices=3))
+    assert topo.requested_kind(cfg) == "worker_mesh"
+    assert topo.worker_count(cfg) == 3
+    cfg = CFG.replace(topology=TopologySpec(kind="worker_mesh",
+                                            devices=(2, 2),
+                                            axes=("data", "model")))
+    assert topo.worker_count(cfg) == 4
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = CFG.replace(mesh=make_mesh((1,), ("data",)))
+    assert topo.requested_kind(legacy) == "legacy_mesh"
+    assert topo.worker_count(legacy) == 1
+
+
+# ---------------------------------------------------------------------------
+# config integration: the primary path is declarative, raw mesh is shimmed
+# ---------------------------------------------------------------------------
+
+
+def test_config_normalizes_topology_to_spec():
+    cfg = CFG.replace(topology="host_mesh")
+    assert isinstance(cfg.topology, TopologySpec)
+    assert cfg.topology.kind == "host_mesh"
+    with pytest.raises(ValueError):
+        CFG.replace(topology="bogus")
+    with pytest.raises(TypeError):
+        CFG.replace(topology=7)
+
+
+def test_raw_mesh_deprecated_but_working():
+    mesh = make_mesh((1,), ("streams",))
+    with pytest.warns(DeprecationWarning, match="topology"):
+        cfg = CFG.replace(mesh=mesh, stream_axis="streams")
+    assert cfg.mesh is mesh                     # shim: still carried through
+
+
+def test_raw_mesh_conflicts_with_explicit_topology():
+    mesh = make_mesh((1,), ("streams",))
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            CFG.replace(mesh=mesh, topology="stream_mesh")
+
+
+def test_shim_and_spec_bit_identical_streaming():
+    """A raw cfg.mesh and the equivalent declarative spec must produce the
+    same fit, bit for bit."""
+    mesh = make_mesh((1,), ("streams",))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = CFG.replace(mesh=mesh, stream_axis="streams", batch=2)
+    spec = CFG.replace(batch=2, topology=TopologySpec(
+        kind="stream_mesh", devices=1, axes=("streams",)))
+    r_legacy = fit(X, legacy, method="streaming")
+    r_spec = fit(X, spec, method="streaming")
+    assert r_legacy.objective == r_spec.objective
+    np.testing.assert_array_equal(np.asarray(r_legacy.centroids),
+                                  np.asarray(r_spec.centroids))
+    assert r_legacy.n_accepted == r_spec.n_accepted
+
+
+def test_shim_and_spec_bit_identical_batched():
+    mesh = make_mesh((1,), ("streams",))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = CFG.replace(mesh=mesh, stream_axis="streams", batch=4)
+    spec = CFG.replace(batch=4, topology=TopologySpec(
+        kind="stream_mesh", devices=1, axes=("streams",)))
+    r_legacy = fit(X, legacy, method="batched")
+    r_spec = fit(X, spec, method="batched")
+    assert r_legacy.objective == r_spec.objective
+    np.testing.assert_array_equal(np.asarray(r_legacy.centroids),
+                                  np.asarray(r_spec.centroids))
+
+
+def test_batched_rejects_worker_topology():
+    cfg = CFG.replace(topology=TopologySpec(kind="worker_mesh", devices=1),
+                      batch=2)
+    with pytest.raises(ValueError, match="batched"):
+        fit(X, cfg, method="batched")
+
+
+def test_sharded_consumes_spec():
+    cfg = CFG.replace(topology=TopologySpec(kind="worker_mesh", devices=1))
+    r = fit(X, cfg, method="sharded")
+    assert r.extras["workers"] == 1
+
+
+def test_auto_routes_host_mesh_to_streaming(monkeypatch):
+    from repro.api import strategies as S
+    from repro.api.sources import as_source
+
+    monkeypatch.delenv("REPRO_NUM_HOSTS", raising=False)
+    cfg = CFG.replace(topology="host_mesh")
+    assert S.resolve_auto(cfg, as_source(X)) == "streaming"
+
+
+def test_single_process_host_mesh_matches_plain_streaming(monkeypatch):
+    """topology='host_mesh' with hosts=1 is the degenerate group: no
+    coordination service, and results bit-identical to plain streaming."""
+    monkeypatch.delenv("REPRO_NUM_HOSTS", raising=False)
+    cfg = CFG.replace(batch=4)
+    r_plain = fit(X, cfg, method="streaming")
+    r_host = fit(X, cfg.replace(topology="host_mesh"), method="streaming")
+    assert r_plain.objective == r_host.objective
+    np.testing.assert_array_equal(np.asarray(r_plain.centroids),
+                                  np.asarray(r_host.centroids))
+    assert r_plain.n_accepted == r_host.n_accepted
+    assert r_host.extras["host"]["processes"] == 1
+    ranks = r_host.extras["health"]["ranks"]
+    assert len(ranks) == 1 and ranks[0]["rank"] == 0
